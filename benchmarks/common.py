@@ -1,0 +1,72 @@
+"""Shared benchmark utilities.
+
+Every benchmark prints CSV rows ``name,us_per_call,derived`` where
+``derived`` carries the figure-specific metric (accuracy, ratio, ...).
+Rounds are reduced vs the paper's 1500 (CPU container); the attack
+dynamics they validate are the paper's.  REPRO_BENCH_ROUNDS overrides.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core.attacks import AttackConfig
+from repro.core.bmoe import BMoEConfig, BMoESystem
+from repro.data.synthetic import CIFAR10, FMNIST, make_image_dataset
+
+ROUNDS = int(os.environ.get("REPRO_BENCH_ROUNDS", "120"))
+BATCH = 256  # samples per published task (paper: 1000)
+
+_DATA_CACHE = {}
+
+
+def dataset(kind: str):
+    if kind not in _DATA_CACHE:
+        spec = FMNIST if kind == "fmnist" else CIFAR10
+        xtr, ytr, xte, yte = make_image_dataset(spec, n_train=6000,
+                                                n_test=1500, seed=0)
+        if kind == "fmnist":
+            xtr = xtr.reshape(len(xtr), -1)
+            xte = xte.reshape(len(xte), -1)
+        _DATA_CACHE[kind] = (xtr, ytr, xte, yte)
+    return _DATA_CACHE[kind]
+
+
+def make_system(framework: str, kind: str, attack: AttackConfig,
+                seed: int = 0) -> BMoESystem:
+    cfg = BMoEConfig(
+        framework=framework,
+        expert_kind="mlp" if kind == "fmnist" else "cnn",
+        in_dim=784 if kind == "fmnist" else 32 * 32 * 3,
+        in_ch=1 if kind == "fmnist" else 3,
+        attack=attack,
+        pow_difficulty=6,
+        seed=seed,
+        lr=0.01 if kind == "fmnist" else 0.1,   # paper §V-A(4)
+    )
+    return BMoESystem(cfg)
+
+
+def train_system(system: BMoESystem, kind: str, rounds: int,
+                 attack: AttackConfig | None = None, eval_every: int = 0):
+    xtr, ytr, xte, yte = dataset(kind)
+    rng = np.random.default_rng(system.cfg.seed)
+    curve = []
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        idx = rng.integers(0, len(xtr), BATCH)
+        system.train_round(xtr[idx], ytr[idx], attack=attack)
+        if eval_every and (r % eval_every == 0 or r == rounds - 1):
+            acc = system.evaluate(xte[:600], yte[:600],
+                                  attack=AttackConfig())
+            curve.append((r, acc))
+    wall = time.perf_counter() - t0
+    return curve, wall
+
+
+def row(name: str, us_per_call: float, derived) -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line, flush=True)
+    return line

@@ -1,0 +1,62 @@
+"""Fig. 2: activation ratio of each expert of traditional distributed MoE
+with ('Y') and without ('N') data-manipulation attacks, during training
+and during inference.
+
+Validates: under attack, the training-time gate de-activates the experts
+on malicious edges (7-9); the frozen inference-time gate does not."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BATCH, ROUNDS, dataset, make_system, row, train_system
+from repro.core.attacks import AttackConfig
+
+MALICIOUS = (7, 8, 9)
+ATK = AttackConfig(malicious_edges=MALICIOUS, attack_prob=0.2,
+                   noise_std=5.0)
+
+
+def main(kind: str = "fmnist"):
+    rows = []
+    xtr, ytr, xte, yte = dataset(kind)
+    results = {}
+    for label, train_atk, infer_atk in [
+            ("train_N", AttackConfig(), None),
+            ("train_Y", ATK, None),
+            ("infer_N", AttackConfig(), AttackConfig()),
+            ("infer_Y", AttackConfig(), ATK)]:
+        sys_ = make_system("traditional", kind, train_atk)
+        _, wall = train_system(sys_, kind, ROUNDS, attack=train_atk)
+        if label.startswith("train"):
+            ratio = sys_.activation_ratio
+        else:
+            # inference on the (clean-)trained model, counting activations
+            sys_.activation_counts[:] = 0
+            sys_.activation_total = 0
+            total = np.zeros(10)
+            n = 0
+            for i in range(0, len(xte), 500):
+                chunk = xte[i:i + 500]
+                _, act, _ = sys_.infer(chunk, attack=infer_atk)
+                total += act
+                n += len(chunk) * sys_.cfg.top_k
+            ratio = total / n
+        results[label] = ratio
+        mal = float(ratio[list(MALICIOUS)].mean())
+        hon = float(ratio[:7].mean())
+        us = wall / max(ROUNDS, 1) * 1e6
+        rows.append(row(f"fig2_{kind}_{label}", us,
+                        f"mal_ratio={mal:.3f};honest_ratio={hon:.3f}"))
+    # the paper's two observations:
+    tr_drop = (results["train_Y"][list(MALICIOUS)].mean()
+               < 0.5 * results["train_N"][list(MALICIOUS)].mean())
+    inf_flat = (results["infer_Y"][list(MALICIOUS)].mean()
+                > 0.6 * results["infer_N"][list(MALICIOUS)].mean())
+    rows.append(row(f"fig2_{kind}_claims", 0.0,
+                    f"training_gate_deactivates={tr_drop};"
+                    f"inference_gate_blind={inf_flat}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Fig. 4(a): training-process test accuracy of B-MoE vs traditional
+distributed MoE under data-manipulation attacks (malicious ratio r).
+
+Validates: B-MoE under attack ~= attack-free accuracy; traditional
+degrades.  (Paper: >=45% improvement on Fashion-MNIST, 67% on CIFAR-10 at
+their scale/rounds.)"""
+from __future__ import annotations
+
+from benchmarks.common import ROUNDS, make_system, row, train_system
+from repro.core.attacks import AttackConfig
+
+
+def main(kind: str = "fmnist"):
+    rows = []
+    atk = AttackConfig(malicious_edges=(5, 6, 7, 8, 9), attack_prob=0.5,
+                       noise_std=8.0)   # r = 0.5 coalition, aggressive
+    finals = {}
+    for name, fw, attack in [("bmoe_attacked", "bmoe", atk),
+                             ("trad_attacked", "traditional", atk),
+                             ("trad_clean", "traditional", AttackConfig())]:
+        sys_ = make_system(fw, kind, attack)
+        curve, wall = train_system(sys_, kind, ROUNDS, attack=attack,
+                                   eval_every=max(ROUNDS // 6, 1))
+        finals[name] = curve[-1][1]
+        us = wall / ROUNDS * 1e6
+        pts = ";".join(f"{r}:{a:.3f}" for r, a in curve)
+        rows.append(row(f"fig4a_{kind}_{name}", us, pts))
+    gain = finals["bmoe_attacked"] - finals["trad_attacked"]
+    rows.append(row(
+        f"fig4a_{kind}_claims", 0.0,
+        f"bmoe={finals['bmoe_attacked']:.3f};trad={finals['trad_attacked']:.3f};"
+        f"gain={gain:.3f};bmoe_matches_clean="
+        f"{abs(finals['bmoe_attacked'] - finals['trad_clean']) < 0.05}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Microbenchmarks of the core numeric hot spots (jit'd, CPU wall-clock):
+redundancy vote (the paper's Step-3 consensus), grouped expert GEMM,
+blockwise attention, SSD scan.  us_per_call is the real measure here;
+derived carries shape info."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # consensus vote at the paper's scale (N=10 experts, M=10 edges)
+    pub = jax.random.normal(key, (10, 10, 256, 10))
+    f = jax.jit(lambda p: ops.redundancy_vote(p, backend="ref"))
+    rows.append(row("vote_paper_scale_N10_M10", _time(f, pub),
+                    "E=10,M=10,B=256,C=10"))
+
+    # consensus vote at LM scale (one MoE layer buffer, r=4 replicas)
+    pub = jax.random.normal(key, (8 * 16, 4, 40, 256))
+    rows.append(row("vote_lm_scale_r4", _time(f, pub),
+                    "BE=128,r=4,C=40,d=256"))
+
+    # grouped expert GEMM
+    buf = jax.random.normal(key, (16, 128, 256), jnp.float32)
+    w = jax.random.normal(key, (16, 256, 512), jnp.float32)
+    g = jax.jit(lambda b, ww: ops.moe_gemm(b, ww, backend="ref"))
+    rows.append(row("moe_gemm_E16_C128", _time(g, buf, w),
+                    "flops=%.2e" % (2 * 16 * 128 * 256 * 512)))
+
+    # blockwise attention 2k
+    q = jax.random.normal(key, (1, 2048, 4, 64))
+    k = jax.random.normal(key, (1, 2048, 2, 64))
+    from repro.models.layers import blockwise_attention
+    a = jax.jit(lambda q, k: blockwise_attention(q, k, k, causal=True))
+    rows.append(row("blockwise_attn_2k", _time(a, q, k, iters=5),
+                    "S=2048,H=4,D=64"))
+
+    # SSD scan
+    x = jax.random.normal(key, (2, 1024, 4, 32))
+    dt = jax.nn.softplus(jax.random.normal(key, (2, 1024, 4))) * 0.1
+    A = -jnp.ones(4) * 0.5
+    Bm = jax.random.normal(key, (2, 1024, 16)) * 0.5
+    from repro.models.ssm import ssd_chunked
+    s = jax.jit(lambda x, dt, Bm: ssd_chunked(
+        x, dt, A, Bm, Bm, jnp.zeros((2, 4, 32, 16)), 128)[0])
+    rows.append(row("ssd_chunked_1k", _time(s, x, dt, Bm, iters=5),
+                    "S=1024,H=4,P=32,N=16"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Generate the EXPERIMENTS.md data tables from dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.make_experiments_tables > artifacts/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+
+from repro.launch.roofline import roofline_row
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return []
+
+
+def fmt(x, n=2):
+    return f"{x:.{n}e}"
+
+
+def dryrun_table(recs, title):
+    print(f"\n### {title}\n")
+    print("| arch | shape | compiled | compile_s | args B/dev | temp B/dev "
+          "| HLO dot FLOPs/dev | wire B/dev | collective ops |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if "skipped" in r:
+            print(f"| {r['arch']} | {r['shape']} | SKIP (documented) "
+                  f"| — | — | — | — | — | — |")
+            continue
+        if "error" in r:
+            print(f"| {r['arch']} | {r['shape']} | **FAILED** | — | — | — "
+                  f"| — | — | — |")
+            continue
+        cc = {k: int(v) for k, v in r["collective_counts"].items() if v}
+        print(f"| {r['arch']} | {r['shape']} | OK | {r['compile_s']} "
+              f"| {fmt(r['argument_size_in_bytes'])} "
+              f"| {fmt(r['temp_size_in_bytes'])} "
+              f"| {fmt(r['dot_flops'])} "
+              f"| {fmt(r['total_collective_bytes'])} | {cc} |")
+
+
+def roofline_table(recs, title):
+    print(f"\n### {title}\n")
+    print("| arch | shape | compute s | memory s | collective s | dominant "
+          "| MODEL_FLOPS | useful ratio | lever |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        row = roofline_row(r)
+        if row is None:
+            continue
+        print(f"| {row['arch']} | {row['shape']} | {fmt(row['compute_s'])} "
+              f"| {fmt(row['memory_s'])} | {fmt(row['collective_s'])} "
+              f"| **{row['dominant']}** | {fmt(row['model_flops_total'])} "
+              f"| {row['useful_ratio']:.2f} | {row['lever'][:58]}... |")
+
+
+def perf_compare(base, new, title, key="total_collective_bytes"):
+    bd = {(r["arch"], r["shape"]): r for r in base if "flops" in r}
+    nd = {(r["arch"], r["shape"]): r for r in new if "flops" in r}
+    print(f"\n### {title}\n")
+    print("| arch | shape | wire B/dev before | after | improvement "
+          "| HLO FLOPs before | after |")
+    print("|---|---|---|---|---|---|---|")
+    for k in sorted(nd):
+        b, n = bd.get(k), nd[k]
+        if not b:
+            continue
+        cb, cn = b[key], n[key]
+        ratio = cb / max(cn, 1)
+        print(f"| {k[0]} | {k[1]} | {fmt(cb)} | {fmt(cn)} "
+              f"| {'**' + f'{ratio:.1f}x' + '**' if ratio > 1.2 else f'{ratio:.1f}x'} "
+              f"| {fmt(b['dot_flops'])} | {fmt(n['dot_flops'])} |")
+
+
+def trusted_table():
+    rows = []
+    for mode in ("off", "faithful", "digest"):
+        for arch in ("llama4-maverick-400b-a17b", "qwen2-moe-a2.7b",
+                     "bmoe-paper"):
+            for shape in ("train_4k", "decode_32k"):
+                if mode == "off":
+                    recs = load("artifacts/dryrun_single.json")
+                    rec = next((r for r in recs if r.get("arch") == arch
+                                and r.get("shape") == shape and "flops" in r),
+                               None)
+                else:
+                    recs = load(f"artifacts/trusted_{mode}_{arch}_{shape}.json")
+                    rec = recs[0] if recs and "flops" in recs[0] else None
+                if rec:
+                    rows.append((arch, shape, mode, rec))
+    print("\n### B-MoE trust modes (r=4 redundancy) — the paper's technique"
+          " at LM scale\n")
+    print("| arch | shape | mode | HLO dot FLOPs/dev | wire B/dev "
+          "| vs off: FLOPs | wire |")
+    print("|---|---|---|---|---|---|---|")
+    base = {}
+    for arch, shape, mode, r in rows:
+        if mode == "off":
+            base[(arch, shape)] = r
+    for arch, shape, mode, r in rows:
+        b = base.get((arch, shape))
+        fr = r["dot_flops"] / b["dot_flops"] if b else float("nan")
+        wr = (r["total_collective_bytes"] /
+              max(b["total_collective_bytes"], 1) if b else float("nan"))
+        print(f"| {arch} | {shape} | {mode} | {fmt(r['dot_flops'])} "
+              f"| {fmt(r['total_collective_bytes'])} | {fr:.2f}x | {wr:.2f}x |")
+
+
+def main():
+    single = load("artifacts/dryrun_single.json")
+    multi = load("artifacts/dryrun_multi.json")
+    base_single = load("artifacts/baseline/dryrun_single.json")
+    dryrun_table(single, "§Dry-run — single-pod 16x16 (256 chips), optimized")
+    if multi:
+        dryrun_table(multi, "§Dry-run — multi-pod 2x16x16 (512 chips)")
+    roofline_table(single, "§Roofline — single-pod, optimized")
+    if base_single:
+        perf_compare(base_single, single,
+                     "§Perf — paper-faithful baseline vs optimized "
+                     "(all arch x shape)")
+    trusted_table()
+
+
+if __name__ == "__main__":
+    main()

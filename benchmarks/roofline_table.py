@@ -1,0 +1,46 @@
+"""§Roofline table: reads the dry-run artifacts (written by
+``python -m repro.launch.dryrun --all``) and emits one CSV row per
+(arch x shape x mesh) with the three roofline terms + dominant
+bottleneck + MODEL_FLOPS ratio.  Skips gracefully if artifacts are
+missing (run the dry-run first)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+
+def main():
+    rows = []
+    paths = sorted(glob.glob("artifacts/dryrun_*.json") +
+                   glob.glob("artifacts/trusted_*.json"))
+    if not paths:
+        rows.append(row("roofline_table", 0.0,
+                        "NO_ARTIFACTS;run python -m repro.launch.dryrun --all"))
+        return rows
+    from repro.launch.roofline import roofline_row
+    for path in paths:
+        with open(path) as f:
+            recs = json.load(f)
+        for rec in recs:
+            r = roofline_row(rec)
+            if r is None:
+                if "skipped" in rec:
+                    rows.append(row(
+                        f"roofline_{rec['arch']}_{rec['shape']}", 0.0,
+                        "SKIP;" + rec["skipped"][:60]))
+                continue
+            us = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6
+            rows.append(row(
+                f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}_"
+                f"{r['trusted']}", us,
+                f"compute={r['compute_s']:.2e};memory={r['memory_s']:.2e};"
+                f"collective={r['collective_s']:.2e};"
+                f"dominant={r['dominant']};useful={r['useful_ratio']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

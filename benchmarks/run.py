@@ -1,0 +1,41 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+
+  python -m benchmarks.run                 # everything
+  python -m benchmarks.run fig4c kernels   # subset
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.row)."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig2_activation_ratio, fig4a_training,
+                            fig4b_latency, fig4c_inference, kernel_bench,
+                            roofline_table, sec6_extensions)
+    suites = {
+        "kernels": lambda: kernel_bench.main(),
+        "fig2": lambda: fig2_activation_ratio.main("fmnist"),
+        "fig4a": lambda: (fig4a_training.main("fmnist")
+                          + fig4a_training.main("cifar")),
+        "fig4b": lambda: fig4b_latency.main("fmnist"),
+        "fig4c": lambda: (fig4c_inference.main("fmnist")
+                          + fig4c_inference.main("cifar")),
+        "roofline": lambda: roofline_table.main(),
+        "sec6": lambda: sec6_extensions.main("fmnist"),
+    }
+    selected = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in selected:
+        if name not in suites:
+            print(f"# unknown suite {name}; known: {sorted(suites)}")
+            continue
+        print(f"# --- {name} ---", flush=True)
+        suites[name]()
+    print(f"# total wall: {time.time() - t0:.0f}s")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,66 @@
+"""End-to-end driver (deliverable (b)): trains the paper's two frameworks
+for a few hundred rounds under a training-time data-manipulation attack
+and reproduces the paper's three headline effects:
+
+  1. traditional MoE's gate de-activates poisoned experts (Fig. 2) —
+     workload imbalance;
+  2. B-MoE keeps workload balanced AND accuracy near attack-free (Fig. 4a);
+  3. at inference the traditional gate is blind, B-MoE tolerates any
+     minority coalition (Fig. 4c shape).
+
+Run:  PYTHONPATH=src python examples/attack_and_consensus.py [rounds]
+"""
+import sys
+
+import numpy as np
+
+from repro.core.attacks import AttackConfig
+from repro.core.bmoe import BMoEConfig, BMoESystem
+from repro.data.synthetic import FMNIST, make_image_dataset
+
+ROUNDS = int(sys.argv[1]) if len(sys.argv) > 1 else 200
+
+xtr, ytr, xte, yte = make_image_dataset(FMNIST, n_train=6000, n_test=1500)
+xtr, xte = xtr.reshape(len(xtr), -1), xte.reshape(len(xte), -1)
+attack = AttackConfig(malicious_edges=(7, 8, 9), attack_prob=0.2,
+                      noise_std=5.0)
+
+systems = {}
+for fw in ("traditional", "bmoe"):
+    print(f"=== training {fw} under attack ({ROUNDS} rounds) ===")
+    s = BMoESystem(BMoEConfig(framework=fw, attack=attack,
+                              pow_difficulty=6))
+    rng = np.random.default_rng(0)
+    for r in range(ROUNDS):
+        idx = rng.integers(0, len(xtr), 256)
+        m = s.train_round(xtr[idx], ytr[idx])
+        if r % max(ROUNDS // 5, 1) == 0:
+            acc = s.evaluate(xte[:500], yte[:500], attack=AttackConfig())
+            print(f"  round {r:4d} loss={float(m['loss']):.3f} "
+                  f"clean_acc={acc:.3f}")
+    systems[fw] = s
+
+print("\n--- Fig. 2: activation ratios after attacked training ---")
+for fw, s in systems.items():
+    r = np.round(s.activation_ratio, 3)
+    print(f"  {fw:12s} honest(0-6)={r[:7].mean():.3f} "
+          f"malicious(7-9)={r[7:].mean():.3f}   full={r.tolist()}")
+
+print("\n--- Fig. 4a: accuracy after attacked training ---")
+for fw, s in systems.items():
+    acc = s.evaluate(xte, yte, attack=attack)
+    print(f"  {fw:12s} accuracy under attack: {acc:.3f}")
+
+print("\n--- Fig. 4c: inference attack sweep on the B-MoE model ---")
+for ratio in (0.0, 0.2, 0.4, 0.6):
+    m = round(ratio * 10)
+    atk = AttackConfig(malicious_edges=tuple(range(10 - m, 10)),
+                       attack_prob=1.0, noise_std=5.0)
+    accs = {fw: s.evaluate(xte[:800], yte[:800], attack=atk)
+            for fw, s in systems.items()}
+    marker = "  <- threshold exceeded" if ratio > 0.5 else ""
+    print(f"  malicious_ratio={ratio:.1f}: traditional={accs['traditional']:.3f} "
+          f"bmoe={accs['bmoe']:.3f}{marker}")
+
+print(f"\nledger: {len(systems['bmoe'].ledger.blocks)} blocks, "
+      f"valid={systems['bmoe'].ledger.verify_chain()}")

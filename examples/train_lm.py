@@ -1,0 +1,46 @@
+"""End-to-end LM training driver (deliverable (b)): train a ~100M-param
+decoder on the synthetic bigram stream for a few hundred steps and show
+the loss dropping toward the structure's entropy floor.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [steps] [--arch ID]
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.data.synthetic import lm_batches
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("steps", nargs="?", type=int, default=300)
+ap.add_argument("--arch", default="smollm-360m")
+ap.add_argument("--batch", type=int, default=16)
+ap.add_argument("--seq", type=int, default=128)
+args = ap.parse_args()
+
+# ~100M-scale variant of the chosen family that trains on CPU
+cfg = get_config(args.arch)
+cfg = dataclasses.replace(
+    cfg, num_layers=4, num_blocks=4 // len(cfg.block_pattern) or 1,
+    remainder=(), d_model=512,
+    num_heads=8, num_kv_heads=4,   # GQA 2:1 (kv must divide heads)
+    head_dim=64, d_ff=1536, vocab_size=8192, train_microbatches=1,
+    num_experts=min(cfg.num_experts, 8) if cfg.num_experts else 0,
+    moe_d_ff=min(cfg.moe_d_ff, 512) if cfg.moe_d_ff else 0).validate()
+from repro.launch.costmodel import param_counts
+print(f"arch={cfg.name} params={param_counts(cfg)['total']/1e6:.1f}M "
+      f"steps={args.steps}")
+
+batches = lm_batches(cfg.vocab_size, args.batch, args.seq, seed=0,
+                     p_structured=0.9)
+params, history = train(
+    cfg, batches, steps=args.steps,
+    opt_cfg=AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps),
+    log_every=max(args.steps // 15, 1),
+    callback=lambda m: print(f"  step {m['step']:4d} loss={m['loss']:.4f} "
+                             f"lr={m['lr']:.2e} "
+                             f"({m['wall_s']:.0f}s)"))
+first, last = history[0]["loss"], history[-1]["loss"]
+print(f"loss {first:.3f} -> {last:.3f} "
+      f"({'DECREASED' if last < first - 0.5 else 'check hyperparams'})")

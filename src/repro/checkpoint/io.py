@@ -1,0 +1,48 @@
+"""Checkpointing: local npz save/restore plus content-addressed storage
+through the B-MoE storage layer (CIDs recorded on a ledger when given),
+mirroring the paper's Step 5 expert-storage flow for whole checkpoints.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.ledger import Ledger, digest_bytes
+from repro.core.storage import StorageNetwork, deserialize_tree, serialize_tree
+
+
+def save(path: str, tree: Any) -> str:
+    """Save a pytree to ``path`` (npz).  Returns the content digest."""
+    data = serialize_tree(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(data)
+    return digest_bytes(data)
+
+
+def restore(path: str, like: Any) -> Any:
+    with open(path, "rb") as f:
+        data = f.read()
+    return deserialize_tree(data, like)
+
+
+def save_to_storage(storage: StorageNetwork, tree: Any,
+                    ledger: Optional[Ledger] = None,
+                    meta: Optional[dict] = None) -> str:
+    """Store a checkpoint in the decentralized storage layer; optionally
+    record its CID on-chain."""
+    cid = storage.put(serialize_tree(tree))
+    if ledger is not None:
+        from repro.core.ledger import Block
+        payload = dict(meta or {})
+        payload.update({"kind": "checkpoint", "cid": cid})
+        ledger.append(Block(index=len(ledger.blocks),
+                            prev_hash=ledger.head.hash, payload=payload))
+    return cid
+
+
+def restore_from_storage(storage: StorageNetwork, cid: str, like: Any) -> Any:
+    return deserialize_tree(storage.get(cid), like)

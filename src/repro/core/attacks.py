@@ -1,0 +1,84 @@
+"""Data-manipulation attacks (paper §III, §V-A(5)).
+
+The paper's adversary: malicious edges "inject random Gaussian noise into
+the employed experts in each round", attacking with probability 0.2 per
+round; in B-MoE the malicious edges *collude* — they publish identical
+manipulated results to maximize their coalition's vote weight (§V-B).
+
+Two manipulation surfaces:
+- output manipulation: corrupt the expert's computational result;
+- parameter poisoning: corrupt the updated expert parameters uploaded to
+  the storage layer (detected on-chain via hash vote, paper Step 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackConfig:
+    malicious_edges: tuple = ()       # edge indices controlled by adversary
+    attack_prob: float = 0.2          # per-round attack probability (paper)
+    noise_std: float = 5.0            # Gaussian manipulation magnitude
+    colluding: bool = True            # identical manipulated results (paper)
+    poison_params: bool = False       # also corrupt uploaded expert params
+
+    @property
+    def num_malicious(self) -> int:
+        return len(self.malicious_edges)
+
+
+def round_attack_mask(atk: AttackConfig, num_edges: int, round_key) -> jax.Array:
+    """(num_edges,) float mask: 1.0 where the edge attacks this round."""
+    mal = jnp.zeros(num_edges).at[jnp.array(atk.malicious_edges,
+                                            jnp.int32)].set(1.0) \
+        if atk.malicious_edges else jnp.zeros(num_edges)
+    if atk.colluding:
+        # coalition attacks together (one coin flip per round)
+        flip = (jax.random.uniform(round_key, ()) < atk.attack_prob)
+        return mal * flip.astype(jnp.float32)
+    flips = (jax.random.uniform(round_key, (num_edges,)) < atk.attack_prob)
+    return mal * flips.astype(jnp.float32)
+
+
+def manipulate_outputs(outputs: jax.Array, mask: jax.Array,
+                       noise_std: float, key, colluding: bool = True):
+    """Corrupt per-edge copies of expert outputs.
+
+    outputs: (E, M, ...) — expert e's result as published by edge m.
+    mask: (M,) 1.0 for attacking edges.  Colluding attackers share one
+    noise draw (identical manipulated results); independent attackers
+    draw per-edge noise.
+    """
+    E, M = outputs.shape[:2]
+    tail = outputs.shape[2:]
+    if colluding:
+        noise = jax.random.normal(key, (E, 1) + tail, outputs.dtype)
+        noise = jnp.broadcast_to(noise, outputs.shape)
+    else:
+        noise = jax.random.normal(key, outputs.shape, outputs.dtype)
+    mshape = (1, M) + (1,) * len(tail)
+    return outputs + noise_std * noise * mask.reshape(mshape)
+
+
+def manipulate_single(outputs: jax.Array, mask: jax.Array, noise_std: float,
+                      key):
+    """Traditional distributed MoE: expert e lives only on edge e.
+    outputs: (E, ...); mask: (E,)."""
+    noise = jax.random.normal(key, outputs.shape, outputs.dtype)
+    mshape = (outputs.shape[0],) + (1,) * (outputs.ndim - 1)
+    return outputs + noise_std * noise * mask.reshape(mshape)
+
+
+def poison_tree(tree, key, noise_std: float):
+    """Parameter poisoning: add Gaussian noise to every leaf."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    out = [l + noise_std * jax.random.normal(k, jnp.shape(l), jnp.result_type(l))
+           for l, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,319 @@
+"""The B-MoE system (paper §IV): task publisher + edge layer + blockchain
+layer + storage layer, running the full Step 1-6 workflow for training
+and the Step 1-3 (+6) workflow for inference.
+
+Two frameworks are implemented behind one API:
+
+- ``framework="traditional"``: the paper's baseline — edge i employs
+  expert i; no redundancy, no consensus; malicious edges corrupt their
+  own expert's results (and the gate must cope on its own, §III).
+- ``framework="bmoe"``: every edge computes ALL activated experts
+  (redundancy mechanism); the blockchain layer majority-votes the
+  per-expert results, aggregates the trusted ones, and records the round
+  in a PoW block; updated experts are hash-voted and stored by CID
+  (Steps 4-5) during training.
+
+The numerics (expert compute, manipulation, majority vote, SGD) run as
+one jitted step; the ledger/PoW/storage bookkeeping runs per round in
+Python, mirroring the paper's on-chain/off-chain split.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import experts as ex
+from repro.core.attacks import AttackConfig, round_attack_mask, poison_tree
+from repro.core.consensus import ProofOfWork, majority_tree_vote
+from repro.core.ledger import Block, Ledger, digest_array, digest_tree
+from repro.core.reputation import ReputationConfig, ReputationLedger, WorkloadBalancer
+from repro.core.storage import StorageNetwork
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class BMoEConfig:
+    num_experts: int = 10           # N (paper §V)
+    num_edges: int = 10             # M
+    top_k: int = 3                  # K
+    expert_kind: str = "mlp"        # mlp (fmnist) | cnn (cifar)
+    in_dim: int = 784
+    in_ch: int = 1
+    num_classes: int = 10
+    lr: float = 0.01
+    framework: str = "bmoe"         # bmoe | traditional
+    attack: AttackConfig = AttackConfig()
+    pow_difficulty: int = 8
+    num_chain_nodes: int = 8
+    store_every: int = 50           # expert->storage cadence (rounds)
+    bandwidth_bytes_per_s: float = 125e6   # 1 Gbps edge links
+    seed: int = 0
+    # paper §VI extensions (see repro.core.reputation)
+    reputation: Optional[ReputationConfig] = None       # §VI-B/D
+    workload_balance: bool = False                      # §VI-C
+    balance_eta: float = 0.5
+
+
+class BMoESystem:
+    """One instantiation of Fig. 3. See module docstring."""
+
+    def __init__(self, cfg: BMoEConfig):
+        self.cfg = cfg
+        key = jax.random.PRNGKey(cfg.seed)
+        kg, ke = jax.random.split(key)
+        gate_in = cfg.in_dim if cfg.expert_kind == "mlp" else 32 * 32 * cfg.in_ch
+        from repro.models.builder import materialize
+        self.gate = materialize(ex.gate_decl(gate_in, cfg.num_experts), kg)
+        self.experts, self._apply_all = ex.make_expert_bank(
+            cfg.expert_kind, cfg.num_experts, ke, in_dim=cfg.in_dim,
+            in_ch=cfg.in_ch, out=cfg.num_classes)
+        self.ledger = Ledger()
+        self.storage = StorageNetwork(num_nodes=4, replication=2,
+                                      seed=cfg.seed)
+        self.pow = ProofOfWork(cfg.num_chain_nodes,
+                               difficulty_bits=cfg.pow_difficulty,
+                               seed=cfg.seed)
+        self.round = 0
+        self.reputation = (ReputationLedger(cfg.num_edges, cfg.reputation)
+                           if cfg.reputation else None)
+        self.balancer = (WorkloadBalancer(cfg.num_experts, cfg.balance_eta)
+                         if cfg.workload_balance else None)
+        self.activation_counts = np.zeros(cfg.num_experts)
+        self.activation_total = 0
+        self._expert_cids: List[str] = []
+        self._timers: Dict[str, float] = {"compute": 0.0, "consensus": 0.0,
+                                          "chain": 0.0}
+        self._train_step = jax.jit(functools.partial(
+            _train_step, cfg=cfg, apply_all=self._apply_all))
+        self._infer_step = jax.jit(functools.partial(
+            _infer_step, cfg=cfg, apply_all=self._apply_all))
+
+    # ------------------------------------------------------------ api
+    def train_round(self, x, y, *, attack: Optional[AttackConfig] = None):
+        """One full Step 1-6 round on one published task (batch)."""
+        cfg = self.cfg
+        atk = attack if attack is not None else cfg.attack
+        rkey = jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 17),
+                                  self.round)
+        mask_e = round_attack_mask(atk, cfg.num_edges, rkey)
+
+        gate_bias, active = self._controls()
+        t0 = time.perf_counter()
+        (self.gate, self.experts, metrics) = self._train_step(
+            self.gate, self.experts, x, y, mask_e,
+            jax.random.fold_in(rkey, 1), atk.noise_std,
+            jnp.asarray(atk.colluding), gate_bias, active)
+        metrics = jax.tree_util.tree_map(np.asarray, metrics)
+        self._timers["compute"] += time.perf_counter() - t0
+        self._update_controllers(metrics)
+
+        self.activation_counts += metrics["activation"]
+        self.activation_total += int(x.shape[0]) * cfg.top_k
+
+        payload = {
+            "round": self.round, "kind": "train",
+            "task": digest_array(np.asarray(x)[:8]),
+            "loss": float(metrics["loss"]),
+        }
+        if cfg.framework == "bmoe":
+            # Step 4-5: edges upload updated experts; hash vote + storage.
+            t0 = time.perf_counter()
+            payload["trusted_supports"] = metrics["support"].tolist()
+            self._expert_hash_vote(atk, rkey, payload)
+            self._timers["consensus"] += time.perf_counter() - t0
+            # Step 6: block generation under PoW.
+            t0 = time.perf_counter()
+            self._mine(payload)
+            self._timers["chain"] += time.perf_counter() - t0
+        self.round += 1
+        return metrics
+
+    def infer(self, x, *, attack: Optional[AttackConfig] = None):
+        """Steps 1-3 (+6): forward only, no updates (paper: 4-5 skipped)."""
+        cfg = self.cfg
+        atk = attack if attack is not None else cfg.attack
+        rkey = jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 91),
+                                  self.round + 1_000_000)
+        mask_e = round_attack_mask(atk, cfg.num_edges, rkey)
+        gate_bias, active = self._controls()
+        logits, activation, support = self._infer_step(
+            self.gate, self.experts, x, mask_e, jax.random.fold_in(rkey, 1),
+            atk.noise_std, jnp.asarray(atk.colluding), gate_bias, active)
+        return np.asarray(logits), np.asarray(activation), np.asarray(support)
+
+    def evaluate(self, x, y, *, attack: Optional[AttackConfig] = None,
+                 batch: int = 1000) -> float:
+        correct = 0
+        for i in range(0, len(x), batch):
+            logits, _, _ = self.infer(x[i:i + batch], attack=attack)
+            correct += int((logits.argmax(-1) == np.asarray(y[i:i + batch])).sum())
+        return correct / len(x)
+
+    def _controls(self):
+        cfg = self.cfg
+        gate_bias = jnp.asarray(self.balancer.bias) if self.balancer \
+            else jnp.zeros(cfg.num_experts, jnp.float32)
+        if self.reputation is not None:
+            active = jnp.asarray(
+                (~self.reputation.excluded).astype(np.float32))
+        else:
+            active = jnp.ones(cfg.num_edges, jnp.float32)
+        return gate_bias, active
+
+    def _update_controllers(self, metrics):
+        if self.balancer is not None:
+            self.balancer.update(metrics["activation"])
+        if self.reputation is not None and "flags" in metrics:
+            self.reputation.update_from_flags(metrics["flags"])
+
+    @property
+    def activation_ratio(self) -> np.ndarray:
+        return self.activation_counts / max(self.activation_total, 1)
+
+    # -------------------------------------------------------- internals
+    def _expert_hash_vote(self, atk: AttackConfig, rkey, payload):
+        """Paper Step 5: each edge uploads the updated experts' hashes; the
+        chain accepts the majority; poisoned uploads are rejected."""
+        cfg = self.cfg
+        honest_digest = digest_tree(self.experts)
+        uploads = []
+        for m in range(cfg.num_edges):
+            if atk.poison_params and m in atk.malicious_edges:
+                poisoned = poison_tree(self.experts,
+                                       jax.random.fold_in(rkey, 100 + (0 if
+                                       atk.colluding else m)),
+                                       atk.noise_std)
+                uploads.append(digest_tree(poisoned))
+            else:
+                uploads.append(honest_digest)
+        counts: Dict[str, int] = {}
+        for d in uploads:
+            counts[d] = counts.get(d, 0) + 1
+        winner = max(counts, key=counts.get)
+        payload["expert_hash"] = winner[:16]
+        payload["expert_hash_support"] = counts[winner]
+        payload["expert_hash_accepted"] = counts[winner] * 2 > cfg.num_edges
+        if winner != honest_digest and payload["expert_hash_accepted"]:
+            # majority is malicious: chain is misled (paper §IV-B, >50%)
+            payload["chain_misled"] = True
+        if self.round % cfg.store_every == 0:
+            from repro.core.storage import serialize_tree
+            cid = self.storage.put(serialize_tree(self.experts))
+            self._expert_cids.append(cid)
+            payload["expert_cid"] = cid[:16]
+
+    def _mine(self, payload):
+        block = self.pow.mine(len(self.ledger.blocks), self.ledger.head.hash,
+                              payload)
+        self.ledger.append(block)
+
+    # ----------------------------------------------------- latency model
+    def latency_report(self, expert_bytes: int, result_bytes: int,
+                       rounds: int) -> Dict[str, float]:
+        """Per-round latency decomposition (paper Fig. 4b is relative):
+        measured compute/consensus/chain wall-clock + modeled comms."""
+        cfg = self.cfg
+        bw = cfg.bandwidth_bytes_per_s
+        if cfg.framework == "bmoe":
+            # every edge downloads all K activated experts + uploads K results
+            t_comm = (cfg.num_edges * cfg.top_k * expert_bytes
+                      + cfg.num_edges * cfg.top_k * result_bytes) / bw
+        else:
+            t_comm = cfg.top_k * result_bytes / bw
+        r = max(rounds, 1)
+        return {
+            "compute_s": self._timers["compute"] / r,
+            "comm_s": t_comm,
+            "consensus_s": self._timers["consensus"] / r,
+            "chain_s": self._timers["chain"] / r,
+            "total_s": self._timers["compute"] / r + t_comm
+                       + self._timers["consensus"] / r
+                       + self._timers["chain"] / r,
+        }
+
+
+# ---------------------------------------------------------------- steps
+def _flatten_for_gate(x):
+    return x.reshape(x.shape[0], -1)
+
+
+def _moe_forward(gate, experts, x, mask_e, key, noise_std, colluding, cfg,
+                 apply_all, gate_bias=None, active=None):
+    """Shared forward: returns (trusted_out (B,C), weights (B,N),
+    activation (N,), support (N,), flags (N,M))."""
+    B = x.shape[0]
+    xin = x if cfg.expert_kind == "cnn" else _flatten_for_gate(x)
+    logits = ex.gate_apply(gate, _flatten_for_gate(x))
+    if gate_bias is not None:  # §VI-C workload-balance bias (loss-free)
+        logits = logits + jax.lax.stop_gradient(gate_bias)[None, :]
+    weights, topi = ex.sparse_gate_weights(logits, cfg.top_k)
+    outs = apply_all(experts, xin)                      # (N, B, C)
+
+    if cfg.framework == "traditional":
+        # edge i employs expert i: manipulation hits expert i directly
+        from repro.core.attacks import manipulate_single
+        mask_n = mask_e[:cfg.num_experts]
+        corrupted = manipulate_single(outs, mask_n, noise_std, key)
+        trusted = corrupted                              # no consensus
+        support = jnp.full((cfg.num_experts,), 1.0)
+        flags = jnp.ones((cfg.num_experts, cfg.num_edges), jnp.int32)
+    else:
+        # redundancy: every edge publishes every expert's result
+        from repro.core.attacks import manipulate_outputs
+        pub = jnp.broadcast_to(outs[:, None], (cfg.num_experts,
+                                               cfg.num_edges) + outs.shape[1:])
+        # colluding vs independent manipulation, traced under jit
+        noise_c = jax.random.normal(key, (cfg.num_experts, 1) + outs.shape[1:],
+                                    outs.dtype)
+        noise_i = jax.random.normal(jax.random.fold_in(key, 7), pub.shape,
+                                    outs.dtype)
+        noise = jnp.where(colluding, jnp.broadcast_to(noise_c, pub.shape),
+                          noise_i)
+        mshape = (1, cfg.num_edges) + (1,) * (pub.ndim - 2)
+        pub = pub + noise_std * noise * mask_e.reshape(mshape)
+        # Step 3: distributed consensus = majority vote over the M copies
+        # (reputation-excluded edges barred from electorate, §VI-D)
+        act = active if active is not None else jnp.ones(cfg.num_edges)
+        trusted, support, flags = kref.redundancy_vote_masked_ref(pub, act)
+
+    # aggregate with gate weights (paper: weighted sum over top-K)
+    y = jnp.einsum("bn,nbc->bc", weights, trusted)
+    activation = (weights > 0).sum(axis=0).astype(jnp.float32)
+    return y, weights, activation, support, flags, logits
+
+
+def _train_step(gate, experts, x, y, mask_e, key, noise_std, colluding,
+                gate_bias, active, *, cfg, apply_all):
+    def loss_fn(params):
+        gate_p, experts_p = params
+        out, w, activation, support, flags, _ = _moe_forward(
+            gate_p, experts_p, x, mask_e, key, noise_std, colluding, cfg,
+            apply_all, gate_bias, active)
+        logp = jax.nn.log_softmax(out, axis=-1)
+        loss = -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+        return loss, (activation, support, flags)
+
+    (loss, (activation, support, flags)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)((gate, experts))
+    new_gate = jax.tree_util.tree_map(lambda p, g: p - cfg.lr * g, gate,
+                                      grads[0])
+    new_experts = jax.tree_util.tree_map(lambda p, g: p - cfg.lr * g,
+                                         experts, grads[1])
+    metrics = {"loss": loss, "activation": activation, "support": support,
+               "flags": flags}
+    return new_gate, new_experts, metrics
+
+
+def _infer_step(gate, experts, x, mask_e, key, noise_std, colluding,
+                gate_bias, active, *, cfg, apply_all):
+    out, w, activation, support, flags, _ = _moe_forward(
+        gate, experts, x, mask_e, key, noise_std, colluding, cfg, apply_all,
+        gate_bias, active)
+    return out, activation, support

@@ -1,0 +1,100 @@
+"""The paper's expert/gate models (§V-A(5)).
+
+- Gating network: linear (flattened input -> N expert logits).
+- MLP expert (Fashion-MNIST): two fully-connected layers, hidden 256, ReLU.
+- CNN expert (CIFAR-10): three conv layers + two fully-connected layers.
+
+Experts are stored stacked (leading N axis) and evaluated with ``vmap``
+over the expert axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.builder import Leaf, materialize, stack
+
+
+def gate_decl(in_dim: int, num_experts: int) -> dict:
+    return {"w": Leaf((in_dim, num_experts), (None, None), scale=0.01),
+            "b": Leaf((num_experts,), (None,), "zeros")}
+
+
+def gate_apply(params, x):
+    """x: (B, in_dim) -> logits (B, N)."""
+    return x @ params["w"] + params["b"]
+
+
+def mlp_expert_decl(in_dim: int, hidden: int = 256, out: int = 10) -> dict:
+    return {
+        "w1": Leaf((in_dim, hidden), (None, None)),
+        "b1": Leaf((hidden,), (None,), "zeros"),
+        "w2": Leaf((hidden, out), (None, None)),
+        "b2": Leaf((out,), (None,), "zeros"),
+    }
+
+
+def mlp_expert_apply(params, x):
+    """x: (B, in_dim) -> logits (B, out)."""
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def cnn_expert_decl(in_ch: int = 3, out: int = 10) -> dict:
+    """Three 3x3 stride-2 convs + two FC layers (paper §V-A(5); widths
+    unspecified in the paper — sized for the CPU container)."""
+    return {
+        "c1": Leaf((3, 3, in_ch, 16), (None,) * 4),
+        "c2": Leaf((3, 3, 16, 32), (None,) * 4),
+        "c3": Leaf((3, 3, 32, 32), (None,) * 4),
+        "w1": Leaf((4 * 4 * 32, 128), (None, None)),
+        "b1": Leaf((128,), (None,), "zeros"),
+        "w2": Leaf((128, out), (None, None)),
+        "b2": Leaf((out,), (None,), "zeros"),
+    }
+
+
+def _conv(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(2, 2), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def cnn_expert_apply(params, x):
+    """x: (B, 32, 32, C) -> logits (B, out)."""
+    h = jax.nn.relu(_conv(x, params["c1"]))
+    h = jax.nn.relu(_conv(h, params["c2"]))
+    h = jax.nn.relu(_conv(h, params["c3"]))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def make_expert_bank(kind: str, num_experts: int, key, *, in_dim: int = 784,
+                     in_ch: int = 3, hidden: int = 256, out: int = 10):
+    """Returns (stacked_params, apply_all) where apply_all(params, x) ->
+    (N, B, out): every expert's output on the same batch."""
+    if kind == "mlp":
+        decl = stack(mlp_expert_decl(in_dim, hidden, out), num_experts,
+                     axis_name=None)
+        apply_one = mlp_expert_apply
+    elif kind == "cnn":
+        decl = stack(cnn_expert_decl(in_ch, out), num_experts,
+                     axis_name=None)
+        apply_one = cnn_expert_apply
+    else:
+        raise ValueError(kind)
+    params = materialize(decl, key)
+    apply_all = jax.vmap(apply_one, in_axes=(0, None))
+    return params, apply_all
+
+
+def sparse_gate_weights(logits, k: int):
+    """Paper's sparse top-K activation: softmax renormalized over the
+    selected experts.  Returns dense weights (B, N) (zero off the top-K)
+    and the top-K indices (B, k)."""
+    topv, topi = jax.lax.top_k(logits, k)
+    w = jax.nn.softmax(topv, axis=-1)
+    out = jnp.zeros_like(logits)
+    out = out.at[jnp.arange(logits.shape[0])[:, None], topi].set(w)
+    return out, topi

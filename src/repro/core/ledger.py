@@ -1,0 +1,91 @@
+"""Hash-linked ledger (the blockchain layer's data structure).
+
+Each block packages, per the paper's Step 6: the round's task id, the
+trusted (majority-agreed) expert-output digests, the CIDs of the updated
+experts (training only), the final MoE output digest, and the gating
+network digest.  Blocks are linked by SHA-256; ``verify_chain`` detects
+any tampering (the paper's tamper-proofing property).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+def digest_bytes(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+def digest_array(x) -> str:
+    a = np.asarray(x)
+    return digest_bytes(a.tobytes() + str(a.shape).encode() +
+                        str(a.dtype).encode())
+
+
+def digest_tree(tree) -> str:
+    """Deterministic digest of a pytree of arrays (expert params, etc.)."""
+    import jax
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    h = hashlib.sha256(str(treedef).encode())
+    for leaf in leaves:
+        h.update(digest_array(leaf).encode())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class Block:
+    index: int
+    prev_hash: str
+    payload: Dict[str, Any]          # JSON-serializable record
+    nonce: int = 0
+    timestamp: float = 0.0
+    miner: int = -1
+
+    def header_bytes(self) -> bytes:
+        return json.dumps(
+            {"index": self.index, "prev": self.prev_hash,
+             "payload": self.payload, "nonce": self.nonce,
+             "miner": self.miner},
+            sort_keys=True).encode()
+
+    @property
+    def hash(self) -> str:
+        return digest_bytes(self.header_bytes())
+
+
+class Ledger:
+    """Append-only chain with integrity verification."""
+
+    def __init__(self):
+        genesis = Block(0, "0" * 64, {"genesis": True})
+        self.blocks: List[Block] = [genesis]
+
+    @property
+    def head(self) -> Block:
+        return self.blocks[-1]
+
+    def append(self, block: Block) -> None:
+        if block.prev_hash != self.head.hash:
+            raise ValueError("block does not extend the chain head")
+        if block.index != len(self.blocks):
+            raise ValueError("bad block index")
+        self.blocks.append(block)
+
+    def verify_chain(self) -> bool:
+        for i in range(1, len(self.blocks)):
+            if self.blocks[i].prev_hash != self.blocks[i - 1].hash:
+                return False
+            if self.blocks[i].index != i:
+                return False
+        return True
+
+    def find(self, **kv) -> Optional[Block]:
+        for b in reversed(self.blocks):
+            if all(b.payload.get(k) == v for k, v in kv.items()):
+                return b
+        return None

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: blockwise online-softmax (flash) attention for
+training/prefill, with causal + sliding-window masking, GQA, and logit
+softcap.
+
+Layout: q (B, H, Sq, D), k/v (B, KH, Sk, D).  Grid (B*H, nq, nk) with
+the kv dimension innermost: running max / denominator / accumulator live
+in VMEM scratch across kv steps; output is written on the last kv step.
+Block sizes default to (128, 128) — MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale, causal, window, softcap, bq, bk, nk):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]                                     # (bq, D)
+    k = k_ref[0, 0]                                     # (bk, D)
+    v = v_ref[0, 0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = qi * bq + jnp.arange(bq)
+    kpos = ki * bk + jnp.arange(bk)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    bq=128, bk=128, interpret=True):
+    """q: (B, H, Sq, D); k, v: (B, KH, Sk, D) -> (B, H, Sq, D)."""
+    B, H, Sq, D = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    G = H // KH
+    bq, bk = min(bq, Sq), min(bk, Sk)
+    if Sq % bq or Sk % bk:
+        raise ValueError("seq lengths must divide block sizes")
+    nq, nk = Sq // bq, Sk // bk
+    grid = (B * H, nq, nk)
+    from jax.experimental.pallas import tpu as pltpu
+
+    kernel = functools.partial(
+        _flash_kernel, scale=D ** -0.5, causal=causal, window=window,
+        softcap=softcap, bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D),
+                         lambda bh, qi, ki: (bh // H, bh % H, qi, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda bh, qi, ki: (bh // H, (bh % H) // G, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda bh, qi, ki: (bh // H, (bh % H) // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda bh, qi, ki: (bh // H, bh % H, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,114 @@
+"""Public jit'd wrappers over the Pallas kernels with pure-jnp fallback.
+
+``backend`` resolution:
+- "ref"       : pure jnp oracle (default off-TPU — also what GSPMD
+                lowers for the multi-pod dry-run)
+- "pallas"    : compiled Pallas kernel (TPU target)
+- "interpret" : Pallas kernel body interpreted on CPU (how kernels are
+                validated in this container)
+
+Set REPRO_KERNEL_BACKEND to override the default.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import moe_gemm as _mg
+from repro.kernels import redundancy_vote as _rv
+from repro.kernels import rglru_scan as _rg
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import ref
+
+
+def default_backend() -> str:
+    env = os.environ.get("REPRO_KERNEL_BACKEND")
+    if env:
+        return env
+    try:
+        if jax.devices()[0].platform == "tpu":
+            return "pallas"
+    except Exception:
+        pass
+    return "ref"
+
+
+# ------------------------------------------------------ redundancy vote
+def redundancy_vote(pub: jax.Array, axis: int = 1, *, atol: float = 0.0,
+                    backend: str | None = None):
+    """Majority vote over redundant copies (paper Step 3).
+
+    pub: (..., M, ...) with the replica axis at ``axis`` and the expert
+    axis leading.  Canonical layout (E, M, *tail).  Returns
+    (trusted (E, *tail), support (E,))."""
+    if axis != 1:
+        pub = jnp.moveaxis(pub, axis, 1)
+    backend = backend or default_backend()
+    if backend == "ref":
+        return ref.redundancy_vote_ref(pub, atol)
+    E, M = pub.shape[:2]
+    flat = pub.reshape(E, M, -1)
+    T = flat.shape[-1]
+    counts = _rv.pairwise_agreement(
+        flat.astype(jnp.float32), atol=atol,
+        interpret=(backend == "interpret"))
+    pad = (-T) % min(_rv.DEFAULT_TILE, max(T, 1))
+    full_agree = (counts == T + pad).astype(jnp.int32)
+    support_per = full_agree.sum(axis=-1)
+    winner = support_per.argmax(axis=-1)
+    trusted = jnp.take_along_axis(
+        flat, winner[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    support = jnp.take_along_axis(support_per, winner[:, None], axis=1)[:, 0]
+    return trusted.reshape((E,) + pub.shape[2:]), support
+
+
+# ------------------------------------------------------ grouped GEMM
+def moe_gemm(buf, w, *, backend: str | None = None):
+    backend = backend or default_backend()
+    if backend == "ref":
+        return ref.moe_gemm_ref(buf, w)
+    return _mg.moe_gemm(buf, w, interpret=(backend == "interpret"))
+
+
+# ------------------------------------------------------ attention
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    backend: str | None = None):
+    """q: (B, Sq, H, D); k/v: (B, Sk, KH, D) — model layout."""
+    backend = backend or default_backend()
+    if backend == "ref":
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 softcap=softcap)
+    out = _fa.flash_attention(
+        jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1),
+        causal=causal, window=window, softcap=softcap,
+        interpret=(backend == "interpret"))
+    return jnp.moveaxis(out, 1, 2)
+
+
+# ------------------------------------------------------ SSD scan
+def ssd_scan(x, dt, A, Bmat, Cmat, *, chunk=128, backend: str | None = None):
+    backend = backend or default_backend()
+    if backend == "ref":
+        state0 = jnp.zeros((x.shape[0], x.shape[2], x.shape[3],
+                            Bmat.shape[-1]), jnp.float32)
+        y, _ = ref.ssd_scan_ref(x.astype(jnp.float32),
+                                dt.astype(jnp.float32), A,
+                                Bmat.astype(jnp.float32),
+                                Cmat.astype(jnp.float32), state0)
+        return y
+    return _ssd.ssd_scan(x, dt, A, Bmat, Cmat, chunk=chunk,
+                         interpret=(backend == "interpret"))
+
+
+# ------------------------------------------------------ RG-LRU scan
+def rglru_scan(a, b, *, backend: str | None = None):
+    """h_t = a_t * h_{t-1} + b_t over axis 1; a, b: (B, S, C)."""
+    backend = backend or default_backend()
+    if backend == "ref":
+        from repro.models.rglru import rglru_scan as _ref_scan
+        return _ref_scan(a, b)
+    return _rg.rglru_scan_pallas(a, b, interpret=(backend == "interpret"))

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: pairwise-agreement counting for the B-MoE
+redundancy consensus (the paper's Step 3 hot spot).
+
+For each expert, R published copies of its result must be compared
+pairwise to find the majority-consistent one.  The heavy part is the
+elementwise comparison reduce over the result tensor (R^2 x T compares);
+this kernel tiles T through VMEM and accumulates the (R, R) agreement
+counts across grid steps.  The winner selection (argmax + gather) is a
+tiny jnp epilogue in ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 1024
+
+
+def _agree_kernel(pub_ref, out_ref, *, atol: float):
+    t = pl.program_id(1)
+    blk = pub_ref[0]                                   # (M, Tt)
+    agree = (jnp.abs(blk[:, None, :] - blk[None, :, :]) <= atol)
+    counts = agree.sum(axis=-1).astype(jnp.int32)      # (M, M)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[0] = counts
+
+    @pl.when(t != 0)
+    def _acc():
+        out_ref[0] = out_ref[0] + counts
+
+
+def pairwise_agreement(pub: jax.Array, *, atol: float = 0.0,
+                       tile: int = DEFAULT_TILE,
+                       interpret: bool = True) -> jax.Array:
+    """pub: (E, M, T) -> (E, M, M) int32 agreement counts.
+
+    Padding note: T is zero-padded to a tile multiple; padded positions
+    agree for *every* pair, adding a constant to all counts — harmless
+    for the argmax and corrected in ops.redundancy_vote's exact-match
+    test (counts == padded_T  <=>  agree on all real elements).
+    """
+    E, M, T = pub.shape
+    tile = min(tile, max(T, 1))
+    pad = (-T) % tile
+    if pad:
+        pub = jnp.pad(pub, ((0, 0), (0, 0), (0, pad)))
+    Tp = T + pad
+    grid = (E, Tp // tile)
+    return pl.pallas_call(
+        functools.partial(_agree_kernel, atol=atol),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, M, tile), lambda e, t: (e, 0, t))],
+        out_specs=pl.BlockSpec((1, M, M), lambda e, t: (e, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, M, M), jnp.int32),
+        interpret=interpret,
+    )(pub)

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: Mamba-2 chunked SSD scan (arXiv:2405.21060).
+
+Grid (B, H, nchunks) with the chunk dimension innermost and the carried
+(P, N) state in VMEM scratch: each step evaluates the within-chunk dual
+(attention-like) form on a (Q, P) tile and advances the inter-chunk
+state recurrence.  Chunk length Q defaults to 128 (MXU/VPU aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, da_ref, b_ref, c_ref, y_ref, state_ref, *,
+                Q):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0]                                     # (Q, P)
+    dt = dt_ref[0, 0]                                   # (Q,)
+    da = da_ref[0, 0]                                   # (Q,)
+    Bm = b_ref[0]                                       # (Q, N)
+    Cm = c_ref[0]                                       # (Q, N)
+
+    cum = jnp.cumsum(da)                                # (Q,)
+    seg = cum[:, None] - cum[None, :]                   # (Q, Q)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask before exp: above-diagonal seg is positive (overflow risk)
+    L = jnp.where(causal, jnp.exp(jnp.where(causal, seg, 0.0)), 0.0)
+    scores = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32) \
+        * L * dt[None, :]
+    y_intra = jnp.dot(scores, x, preferred_element_type=jnp.float32)
+    state = state_ref[...]                              # (P, N)
+    y_inter = jnp.exp(cum)[:, None] * jnp.dot(
+        Cm, state.T, preferred_element_type=jnp.float32)
+    y_ref[0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    total = cum[-1]
+    w = jnp.exp(total - cum) * dt                       # (Q,)
+    ds = jnp.dot((w[:, None] * x).T, Bm,
+                 preferred_element_type=jnp.float32)    # (P, N)
+    state_ref[...] = jnp.exp(total) * state + ds
+
+
+def ssd_scan(x, dt, A, Bmat, Cmat, *, chunk=128, interpret=True):
+    """x: (B, S, H, P); dt: (B, S, H); A: (H,); Bmat/Cmat: (B, S, N).
+    Returns y: (B, S, H, P) (f32).  State starts at zero (training)."""
+    Bsz, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    Q = min(chunk, S)
+    if S % Q:
+        raise ValueError(f"S={S} not divisible by chunk={Q}")
+    nchunks = S // Q
+    da = dt * A[None, None, :]
+    # layouts: (B, H, S, P), (B, H, S), (B, S, N)
+    xt = jnp.moveaxis(x, 2, 1)
+    dtt = jnp.moveaxis(dt, 2, 1)
+    dat = jnp.moveaxis(da, 2, 1)
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid = (Bsz, H, nchunks)
+    y = pl.pallas_call(
+        functools.partial(_ssd_kernel, Q=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, Q), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, 1, Q), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, H, S, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, dat, Bmat, Cmat)
+    return jnp.moveaxis(y, 1, 2)

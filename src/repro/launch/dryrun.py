@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh)
+combination lowers, compiles, and fits — without real hardware.
+
+For each combination:
+  with mesh:
+      lowered  = jax.jit(step, in_shardings=..., out_shardings=None).lower(*abstract_inputs)
+      compiled = lowered.compile()
+      memory_analysis / cost_analysis / collective-bytes extraction
+
+Results (memory, FLOPs, bytes, per-collective byte counts) are written to
+JSON artifacts consumed by launch/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] --out artifacts/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+
+import jax
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+                "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+                "u64": 8}
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)"
+                       r"\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-operand bytes of every collective op in optimized HLO.
+
+    Uses the op's *output* shape (for all-gather this is the gathered
+    size = bytes received per device; for all-reduce the full operand —
+    a ring all-reduce moves ~2x this, accounted in roofline.py)."""
+    per_op = {op: 0 for op in COLLECTIVE_OPS}
+    counts = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # def lines look like: %name = TYPE[dims]{...} op-name(...)
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for op in COLLECTIVE_OPS:
+            # match 'all-gather(' or 'all-gather-start(' etc.
+            opm = re.search(rf"\b{op}(?:-start)?\(", rhs)
+            if opm:
+                shapes = _SHAPE_RE.findall(rhs[:opm.start()])
+                per_op[op] += sum(_shape_bytes(d, s) for d, s in shapes)
+                counts[op] += 1
+                break
+    total = sum(per_op.values())
+    return {"total_bytes": total, "per_op_bytes": per_op, "counts": counts}
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            trusted: str = "off", redundancy_r: int = 4,
+            unroll: bool = True, kv_int8: bool = False,
+            verbose: bool = True) -> dict:
+    """Lower + compile one (arch, shape, mesh) combination; returns the
+    roofline-input record."""
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.launch import shapes as shp
+    from repro.launch.mesh import make_production_mesh, make_trusted_mesh
+    from repro.models.config import RedundancyConfig
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.step import make_step
+
+    cfg = get_config(arch)
+    ok, reason = shp.applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": reason}
+    if trusted != "off":
+        cfg = dataclasses.replace(
+            cfg, redundancy=RedundancyConfig(r=redundancy_r, mode=trusted))
+        mesh = make_trusted_mesh(redundancy_r, multi_pod=multi_pod)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = shp.shape_config(cfg, shape_name)
+    if kv_int8:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    kind = shp.SHAPES[shape_name]["kind"]
+
+    params, pshard = shp.abstract_params(cfg, mesh=mesh, kind=kind)
+    args, shards = shp.input_specs(cfg, shape_name, mesh=mesh)
+    if kind == "train":
+        opt, oshard = shp.abstract_opt_state(params, pshard, mesh)
+        step_args = (params, opt) + args
+        in_shardings = (pshard, oshard) + shards
+        step = make_step(cfg, "train", mesh,
+                         opt_cfg=AdamWConfig(total_steps=1000),
+                         unroll=unroll)
+    else:
+        step_args = (params,) + args
+        in_shardings = (pshard,) + shards
+        step = make_step(cfg, kind, mesh, unroll=unroll)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(step, in_shardings=in_shardings).lower(*step_args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)          # raw (loop bodies counted once)
+    from repro.launch import hloanalysis
+    loop_aware = hloanalysis.analyze(hlo)  # trip-count corrected
+
+    record = {
+        "arch": arch, "shape": shape_name, "kind": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "trusted": trusted, "unroll": unroll,
+        "kv_int8": kv_int8,
+        "num_devices": mesh.devices.size,
+        "flops": float(cost.get("flops", -1)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1)),
+        "collectives_raw": coll,
+        "collective_bytes": loop_aware["collective_bytes"],
+        "collective_counts": loop_aware["collective_counts"],
+        "total_collective_bytes": loop_aware["total_collective_bytes"],
+        "dot_flops": loop_aware["dot_flops"],
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    }
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "generated_code_size_in_bytes"):
+        record[attr] = getattr(mem, attr, None)
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {record['mesh']} "
+              f"(trusted={trusted}): COMPILED OK in {t_compile:.0f}s")
+        print(f"  memory_analysis: args={record['argument_size_in_bytes']}"
+              f" temp={record['temp_size_in_bytes']}"
+              f" out={record['output_size_in_bytes']}")
+        print(f"  cost_analysis: flops={record['flops']:.3e}"
+              f" bytes={record['bytes_accessed']:.3e}")
+        print(f"  collectives (loop-corrected): "
+              f"{loop_aware['total_collective_bytes']:.3e} B "
+              f"{ {k: int(v) for k, v in loop_aware['collective_counts'].items() if v} }")
+        print(f"  dot_flops (loop-corrected): {loop_aware['dot_flops']:.3e}")
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(__import__("repro.launch.shapes",
+                                            fromlist=["SHAPES"]).SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--trusted", default="off",
+                    choices=["off", "faithful", "digest"])
+    ap.add_argument("--redundancy-r", type=int, default=4)
+    ap.add_argument("--out", default=None, help="JSON output path")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8-quantized decode KV cache (Perf iter 4)")
+    ap.add_argument("--no-unroll", action="store_true",
+                    help="keep scan-over-layers (faster compile, "
+                         "loop-body-once cost accounting)")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_IDS
+    from repro.launch.shapes import SHAPES
+
+    if args.all:
+        combos = [(a, s) for a in ARCH_IDS if a != "bmoe-paper"
+                  for s in SHAPES]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        combos = [(args.arch, args.shape)]
+
+    records = []
+    for arch, shape_name in combos:
+        try:
+            rec = run_one(arch, shape_name, multi_pod=args.multi_pod,
+                          trusted=args.trusted,
+                          redundancy_r=args.redundancy_r,
+                          unroll=not args.no_unroll,
+                          kv_int8=args.kv_int8)
+        except Exception as e:  # a failure here is a bug in the system
+            rec = {"arch": arch, "shape": shape_name, "error": repr(e)[:500]}
+            print(f"[dryrun] {arch} x {shape_name}: FAILED {e!r}")
+        records.append(rec)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"[dryrun] wrote {len(records)} records to {args.out}")
+    failed = [r for r in records if "error" in r]
+    if failed:
+        raise SystemExit(f"{len(failed)} combinations FAILED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,199 @@
+"""Loop-aware accounting over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so with
+scan-over-layers every per-layer cost is understated by the trip count.
+This module parses the HLO module text into its computations, extracts
+while-loop trip counts from the loop conditions (scan lowers to a
+``compare(iter, constant)`` condition), and accumulates per-computation:
+
+- collective bytes (all-gather / all-reduce / reduce-scatter / all-to-all
+  / collective-permute, output-shape bytes), and
+- dot FLOPs (2 * prod(output shape) * prod(contracted dims)),
+
+multiplying costs inside while bodies by their trip counts, recursively
+(nested scans multiply up).  Validated against fully-unrolled compiles in
+tests/test_hloanalysis.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+                "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+                "u64": 8, "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(
+    r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)\[([0-9,]*)\]")
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_CALL_ATTR = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _dims(dims: str) -> List[int]:
+    return [int(d) for d in dims.split(",") if d]
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in _dims(dims):
+        n *= d
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclasses.dataclass
+class Instr:
+    op: str
+    out_bytes: int
+    flops: float
+    calls: List[str]
+    is_while: bool
+    cond: Optional[str]
+    trip: Optional[int] = None  # from backend_config known_trip_count
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    max_const: int = 1  # largest integer constant (trip-count heuristic)
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    shapes_by_name: Dict[str, List[int]] = {}
+    pending_dots: List[Tuple[Instr, str, List[int], List[int]]] = []
+
+    for raw in text.splitlines():
+        line = raw.strip()
+        if cur is None:
+            if line.endswith("{"):
+                m = _COMP_HEADER.match(line)
+                if m:
+                    cur = Computation(m.group(1), [])
+            continue
+        if line == "}" or line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = re.match(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$", line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # record this instruction's (first) output shape for operand lookup
+        sm = _SHAPE_RE.search(rhs)
+        if sm:
+            shapes_by_name[name] = _dims(sm.group(2))
+        opm = re.search(r"\]\S*\s+([a-z][\w\-]*)\(", rhs)
+        op = opm.group(1) if opm else ""
+        base = op[:-6] if op.endswith("-start") else op
+        calls = _CALL_ATTR.findall(rhs)
+        is_while = base == "while"
+        cond = None
+        trip = None
+        if is_while:
+            cm = re.search(r"condition=%?([\w.\-]+)", rhs)
+            cond = cm.group(1) if cm else None
+            bm = re.search(r"body=%?([\w.\-]+)", rhs)
+            calls = [bm.group(1)] if bm else []
+            tm = _TRIP_RE.search(rhs)
+            trip = int(tm.group(1)) if tm else None
+        out_bytes = 0
+        flops = 0.0
+        instr = Instr(base, out_bytes, flops, calls, is_while, cond, trip)
+        if base in COLLECTIVE_OPS and opm:
+            # shapes between '=' and the op name (opm.start(1)) = outputs
+            shapes = _SHAPE_RE.findall(rhs[:opm.start(1)])
+            instr.out_bytes = sum(_shape_bytes(d, s) for d, s in shapes)
+        elif base == "dot":
+            out_dims = _dims(sm.group(2)) if sm else []
+            am = re.search(r"dot\(\s*%?([\w.\-]+)", rhs)
+            km = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+            cdims = _dims(km.group(1)) if km else []
+            pending_dots.append((instr, am.group(1) if am else "",
+                                 out_dims, cdims))
+        elif base == "convolution" and sm:
+            out = 1
+            for d in _dims(sm.group(2)):
+                out *= d
+            all_shapes = _SHAPE_RE.findall(rhs)
+            ker = _dims(all_shapes[-1][1]) if len(all_shapes) >= 2 else []
+            k = 1
+            for d in ker[:-1]:
+                k *= d
+            instr.flops = 2.0 * out * k
+        for c in _CONST_RE.finditer(rhs):
+            cur.max_const = max(cur.max_const, int(c.group(1)))
+        cur.instrs.append(instr)
+
+    # second pass: dot flops = 2 * prod(out) * prod(lhs contracting dims)
+    for instr, lhs_name, out_dims, cdims in pending_dots:
+        lhs = shapes_by_name.get(lhs_name, [])
+        contract = 1
+        for i in cdims:
+            if i < len(lhs):
+                contract *= lhs[i]
+        n = 1
+        for d in out_dims:
+            n *= d
+        instr.flops = 2.0 * n * contract
+    return comps
+
+
+def _trip_count(comps: Dict[str, Computation], cond: Optional[str]) -> int:
+    if cond and cond in comps:
+        return max(comps[cond].max_const, 1)
+    return 1
+
+
+def analyze(text: str, entry: Optional[str] = None) -> dict:
+    """Loop-corrected totals: {'collective_bytes': {op: bytes},
+    'collective_counts': {op: n}, 'dot_flops': float}."""
+    comps = parse_hlo(text)
+    memo: Dict[str, Tuple[Dict[str, float], Dict[str, float], float]] = {}
+
+    def visit(name: str, stack=()) -> Tuple[Dict[str, float],
+                                            Dict[str, float], float]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return {}, {}, 0.0
+        cb: Dict[str, float] = {op: 0.0 for op in COLLECTIVE_OPS}
+        cc: Dict[str, float] = {op: 0.0 for op in COLLECTIVE_OPS}
+        fl = 0.0
+        for ins in comps[name].instrs:
+            if ins.op in COLLECTIVE_OPS:
+                cb[ins.op] += ins.out_bytes
+                cc[ins.op] += 1
+            fl += ins.flops
+            mult = 1
+            if ins.is_while:
+                mult = ins.trip if ins.trip else _trip_count(comps, ins.cond)
+            for callee in ins.calls:
+                scb, scc, sfl = visit(callee, stack + (name,))
+                for op in COLLECTIVE_OPS:
+                    cb[op] += mult * scb.get(op, 0.0)
+                    cc[op] += mult * scc.get(op, 0.0)
+                fl += mult * sfl
+        memo[name] = (cb, cc, fl)
+        return memo[name]
+
+    # entry computation: the one named like ENTRY (first parsed with
+    # 'main' in it) or the explicitly requested one
+    entry_name = entry
+    if entry_name is None:
+        for n in comps:
+            if "main" in n:
+                entry_name = n
+                break
+        else:
+            entry_name = next(iter(comps))
+    cb, cc, fl = visit(entry_name)
+    return {"collective_bytes": cb, "collective_counts": cc,
+            "dot_flops": fl,
+            "total_collective_bytes": sum(cb.values()),
+            "entry": entry_name}

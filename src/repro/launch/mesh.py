@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Functions (never module-level constants) so importing this module never
+touches jax device state.  The dry-run entrypoint sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+import; everything else sees the real device count.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the pod axis folds
+    into the batch sharding (dp = pod x data)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_trusted_mesh(r: int, *, multi_pod: bool = False):
+    """B-MoE redundancy mesh: the data axis splits into (data/r groups,
+    r replicas); same chip count as the production mesh."""
+    if 16 % r:
+        raise ValueError(f"redundancy r={r} must divide 16")
+    if multi_pod:
+        return jax.make_mesh((2, 16 // r, r, 16),
+                             ("pod", "data", "replica", "model"))
+    return jax.make_mesh((16 // r, r, 16), ("data", "replica", "model"))
+
+
+def make_host_mesh():
+    """Whatever fits the current host (CPU tests): 1 device -> (1, 1)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

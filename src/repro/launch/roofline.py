@@ -1,0 +1,114 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from the
+dry-run artifacts.
+
+  compute term    = HLO dot FLOPs (loop-corrected, per device) / 197 TF/s
+  memory term     = HBM traffic model bytes (per device)       / 819 GB/s
+  collective term = wire bytes (loop-corrected; AG + 2*AR + RS + A2A + CP,
+                    output-shape sizes) / 50 GB/s
+
+Also reports MODEL_FLOPS (analytic useful compute) and the ratio
+MODEL_FLOPS / HLO_FLOPs, which catches remat/redundancy waste, plus the
+dominant term and a one-line lever suggestion.
+
+Usage:
+  python -m repro.launch.roofline artifacts/dryrun_single.json [-o out.md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Optional
+
+from repro.launch.costmodel import HW, hbm_bytes, model_flops
+
+LEVERS = {
+    "compute": ("shrink redundant compute: lower remat recompute, skip "
+                "fully-masked attention chunks, larger MoE capacity tiles"),
+    "memory": ("cut HBM traffic: shard/quantize the KV cache, fuse "
+               "elementwise chains, avoid f32 staging of bf16 tensors"),
+    "collective": ("cut wire bytes: reduce-scatter instead of all-reduce "
+                   "+ all-gather, overlap collectives with compute, "
+                   "digest-vote instead of full-tensor redundancy gather"),
+}
+
+
+def roofline_row(rec: dict) -> Optional[dict]:
+    """rec: one dryrun JSON record -> roofline terms."""
+    if "error" in rec or "skipped" in rec:
+        return None
+    from repro.configs import get_config
+    from repro.launch.shapes import SHAPES, shape_config
+    cfg = shape_config(get_config(rec["arch"]), rec["shape"])
+    shape = SHAPES[rec["shape"]]
+    n_dev = rec["num_devices"]
+
+    flops_dev = rec["dot_flops"]                      # per device (SPMD)
+    cb = rec["collective_bytes"]
+    wire = (cb.get("all-gather", 0) + 2 * cb.get("all-reduce", 0)
+            + cb.get("reduce-scatter", 0) + cb.get("all-to-all", 0)
+            + cb.get("collective-permute", 0))
+    mem = hbm_bytes(cfg, shape, n_dev)
+
+    t_compute = flops_dev / HW["peak_flops"]
+    t_memory = mem["total"] / HW["hbm_bw"]
+    t_coll = wire / HW["ici_bw"]
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape)
+    useful_ratio = (mf["total"] / n_dev) / max(flops_dev, 1.0)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "trusted": rec.get("trusted", "off"),
+        "compute_s": t_compute, "memory_s": t_memory,
+        "collective_s": t_coll, "dominant": dominant,
+        "model_flops_total": mf["total"],
+        "hlo_flops_per_dev": flops_dev,
+        "useful_ratio": useful_ratio,
+        "wire_bytes_per_dev": wire,
+        "hbm_bytes_per_dev": mem["total"],
+        "lever": LEVERS[dominant],
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def to_markdown(rows, title="Roofline") -> str:
+    out = [f"### {title}", "",
+           "| arch | shape | trusted | compute (s) | memory (s) | "
+           "collective (s) | dominant | MODEL_FLOPS | useful ratio |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r is None:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['trusted']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | **{r['dominant']}** "
+            f"| {r['model_flops_total']:.2e} | {r['useful_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("records", nargs="+")
+    ap.add_argument("-o", "--out", default=None)
+    args = ap.parse_args()
+    rows = []
+    for path in args.records:
+        with open(path) as f:
+            for rec in json.load(f):
+                row = roofline_row(rec)
+                if row:
+                    rows.append(row)
+                elif "skipped" in rec:
+                    rows.append(None)
+    md = to_markdown([r for r in rows if r])
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(md + "\n")
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Assigned input shapes + ShapeDtypeStruct input_specs per architecture.
+
+INPUT SHAPES (assigned):
+  train_4k       seq_len=  4,096  global_batch= 256  (training)
+  prefill_32k    seq_len= 32,768  global_batch=  32  (inference-prefill)
+  decode_32k     seq_len= 32,768  global_batch= 128  (inference-decode)
+  long_500k      seq_len=524,288  global_batch=   1  (long-context-decode)
+
+``input_specs`` returns weak-type-correct, shardable stand-ins (no device
+allocation) for every model input: tokens/labels for training; frame or
+patch embeddings for the stubbed audio/vision frontends; KV caches +
+single token for decode.  ``applicable`` encodes the documented skips
+(DESIGN.md §6): long_500k only for sub-quadratic archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tfm
+from repro.models.builder import abstract, partition_specs
+from repro.models.config import ModelConfig
+from repro.sharding import logical_rules
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# encoder memory length used for enc-dec decode shapes (frames already
+# encoded at prefill time; cross-KV precomputed in the cache)
+ENCDEC_DECODE_MEMORY = 4096
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention KV cache at 500k has no native "
+                       "sub-quadratic variant (DESIGN.md §6 skip)")
+    return True, ""
+
+
+def shape_config(cfg: ModelConfig, shape_name: str) -> ModelConfig:
+    """Per-shape config adjustments (decode-cache sharding axes)."""
+    info = SHAPES[shape_name]
+    if info["kind"] == "decode":
+        axes = ("data", "model") if info["batch"] == 1 else ("model",)
+        return dataclasses.replace(cfg, cache_seq_axes=axes,
+                                   batch_shardable=info["batch"] > 1)
+    return cfg
+
+
+def _tok(batch, seq):
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, *, mesh=None,
+                dtype=jnp.bfloat16):
+    """Returns (args: tuple of abstract step inputs (after params),
+    shardings: matching tree of NamedShardings or None)."""
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    rules = logical_rules(mesh, cfg)
+    bspec = rules.get("batch")
+
+    def ns(spec):
+        return NamedSharding(mesh, spec) if mesh is not None else None
+
+    if info["kind"] in ("train", "prefill"):
+        if cfg.is_encoder_decoder:
+            batch = {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), dtype),
+                     "tokens": _tok(B, S)}
+            shard = {"frames": ns(P(bspec, None, None)),
+                     "tokens": ns(P(bspec, None))}
+        elif cfg.frontend == "vision":
+            ptoks = min(cfg.frontend_tokens, S // 2)
+            batch = {"patches": jax.ShapeDtypeStruct((B, ptoks, cfg.d_model),
+                                                     dtype),
+                     "tokens": _tok(B, S - ptoks)}
+            shard = {"patches": ns(P(bspec, None, None)),
+                     "tokens": ns(P(bspec, None))}
+        else:
+            batch = {"tokens": _tok(B, S)}
+            shard = {"tokens": ns(P(bspec, None))}
+        if info["kind"] == "train":
+            batch["labels"] = _tok(B, batch["tokens"].shape[1])
+            shard["labels"] = ns(P(bspec, None))
+        return (batch,), (shard,)
+
+    # ---- decode: caches + one token
+    if cfg.is_encoder_decoder:
+        cdecl = encdec_lib.encdec_cache_decl(cfg, B, S, ENCDEC_DECODE_MEMORY)
+    else:
+        cdecl = tfm.cache_decl(cfg, B, S)
+    caches = abstract(cdecl, dtype)
+    cache_specs = partition_specs(cdecl, rules)
+    cache_shard = jax.tree_util.tree_map(
+        ns, cache_specs, is_leaf=lambda x: isinstance(x, P)) \
+        if mesh is not None else None
+    batch = {"tokens": _tok(B, 1), "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    bshard = {"tokens": ns(P(bspec, None)), "pos": ns(P())}
+    return (caches, batch), (cache_shard, bshard)
+
+
+def param_decl(cfg: ModelConfig):
+    return (encdec_lib.encdec_decl(cfg) if cfg.is_encoder_decoder
+            else tfm.model_decl(cfg))
+
+
+def abstract_params(cfg: ModelConfig, *, mesh=None, dtype=jnp.bfloat16,
+                    kind: str = "train"):
+    """(abstract params, NamedSharding tree or None)."""
+    from repro.sharding import use_fsdp
+    decl = param_decl(cfg)
+    params = abstract(decl, dtype)
+    if mesh is None:
+        return params, None
+    rules = logical_rules(mesh, cfg, params=True)   # FSDP param rules
+    if not use_fsdp(cfg, kind, mesh.devices.shape[-1]):
+        rules["embed"] = None                       # replicate over data
+    specs = partition_specs(decl, rules)
+    shard = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+    return params, shard
+
+
+def abstract_opt_state(params_abs, params_shard, mesh=None):
+    """AdamW state stand-ins: m, v shaped/sharded like params (f32)."""
+    from repro.optim.adamw import AdamWState
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), t)
+    state = AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                       m=f32(params_abs), v=f32(params_abs))
+    if mesh is None:
+        return state, None
+    shard = AdamWState(step=NamedSharding(mesh, P()),
+                       m=params_shard, v=params_shard)
+    return state, shard

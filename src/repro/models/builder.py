@@ -1,0 +1,122 @@
+"""Declaration-based parameter trees.
+
+Models declare their parameters once as a nested dict of :class:`Leaf`
+(shape + logical axes + init law).  The same declaration is then
+*materialized* three ways:
+
+- ``materialize``  -> real ``jnp`` arrays (for CPU-scale training/tests)
+- ``abstract``     -> ``jax.ShapeDtypeStruct`` (for the multi-pod dry-run:
+  no memory is ever allocated for the full-size models)
+- ``partition_specs`` -> ``PartitionSpec`` tree (sharding for pjit)
+
+This guarantees params / shapes / shardings can never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Leaf:
+    """A single parameter declaration."""
+
+    shape: tuple
+    axes: tuple  # logical axis name (or None) per dim, len == len(shape)
+    init: str = "normal"  # normal | zeros | ones | scaled | constant
+    scale: float | None = None  # stddev for normal/scaled; value for constant
+    dtype: str | None = None    # override the materialization dtype
+                                # (e.g. "int8" quantized KV caches)
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def _fold_key(root: jax.Array, path: str) -> jax.Array:
+    digest = hashlib.sha256(path.encode()).digest()
+    return jax.random.fold_in(root, int.from_bytes(digest[:4], "big"))
+
+
+def _init_leaf(leaf: Leaf, key: jax.Array, dtype) -> jax.Array:
+    if leaf.init == "zeros":
+        return jnp.zeros(leaf.shape, dtype)
+    if leaf.init == "ones":
+        return jnp.ones(leaf.shape, dtype)
+    if leaf.init == "constant":
+        return jnp.full(leaf.shape, leaf.scale, dtype)
+    if leaf.init in ("normal", "scaled"):
+        if leaf.scale is not None:
+            std = leaf.scale
+        else:  # fan-in scaling on the second-to-last dim (or last for 1D)
+            fan_in = leaf.shape[-2] if len(leaf.shape) >= 2 else leaf.shape[-1]
+            std = 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, leaf.shape, jnp.float32) * std).astype(dtype)
+    raise ValueError(f"unknown init {leaf.init}")
+
+
+def _walk(tree: Tree, fn: Callable[[str, Leaf], Any], prefix: str = "") -> Tree:
+    if isinstance(tree, Leaf):
+        return fn(prefix, tree)
+    if isinstance(tree, Mapping):
+        return {k: _walk(v, fn, f"{prefix}/{k}") for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return [_walk(v, fn, f"{prefix}/{i}") for i, v in enumerate(tree)]
+    raise TypeError(f"unexpected node at {prefix}: {type(tree)}")
+
+
+def _leaf_dtype(leaf: Leaf, default):
+    return jnp.dtype(leaf.dtype) if leaf.dtype else default
+
+
+def materialize(decl: Tree, key: jax.Array, dtype=jnp.float32) -> Tree:
+    return _walk(decl, lambda p, l: _init_leaf(l, _fold_key(key, p),
+                                               _leaf_dtype(l, dtype)))
+
+
+def abstract(decl: Tree, dtype=jnp.bfloat16) -> Tree:
+    return _walk(decl, lambda p, l: jax.ShapeDtypeStruct(
+        l.shape, _leaf_dtype(l, dtype)))
+
+
+def partition_specs(decl: Tree, rules: Mapping[str, Any]) -> Tree:
+    """Map logical axes -> mesh axes.  ``rules[name]`` is a mesh axis name,
+    a tuple of mesh axis names, or None."""
+
+    def leaf_spec(_, leaf: Leaf):
+        return P(*[rules.get(a) if a is not None else None for a in leaf.axes])
+
+    return _walk(decl, leaf_spec)
+
+
+def count_params(decl: Tree) -> int:
+    total = 0
+
+    def add(_, leaf: Leaf):
+        nonlocal total
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+        return None
+
+    _walk(decl, add)
+    return total
+
+
+def stack(decl: Tree, n: int, axis_name: str = "layers") -> Tree:
+    """Prepend a stacked (scan) dimension of size ``n`` to every leaf."""
+
+    def stk(_, leaf: Leaf):
+        return Leaf((n,) + tuple(leaf.shape), (axis_name,) + tuple(leaf.axes),
+                    leaf.init, leaf.scale, leaf.dtype)
+
+    return _walk(decl, stk)

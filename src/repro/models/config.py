@@ -1,0 +1,198 @@
+"""Unified model configuration covering every assigned architecture family:
+dense / MoE / SSM / hybrid (RG-LRU) / VLM / audio enc-dec.
+
+A model is a repeating ``block_pattern`` of :class:`LayerSpec` scanned
+``num_blocks`` times (scan-over-layers keeps HLO size O(1) in depth, which
+is what keeps the 512-device dry-run compile tractable), plus an unrolled
+``remainder`` for depths that don't divide the pattern.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str = "attn"          # attn | local_attn | rglru | ssm
+    mlp: str = "dense"          # dense | moe | none
+
+
+@dataclasses.dataclass(frozen=True)
+class RedundancyConfig:
+    """B-MoE trust settings (the paper's technique at LM scale).
+
+    r: redundancy degree — the ``data`` mesh axis is split into
+       ``data/r`` groups of ``r`` replicas; replicas within a group
+       process identical tokens and majority-vote layer outputs.
+    mode:
+      off      — traditional distributed MoE (paper's baseline)
+      faithful — all-gather full replica outputs, elementwise majority
+                 vote (paper's Step 2-3, redundancy + consensus)
+      digest   — beyond-paper: vote on per-token digests, recover the
+                 majority value with one masked all-reduce (same
+                 detection power vs the paper's adversary, ~r/2 x less
+                 collective traffic)
+    """
+
+    r: int = 1
+    mode: str = "off"           # off | faithful | digest
+
+    def __post_init__(self):
+        if self.mode not in ("off", "faithful", "digest"):
+            raise ValueError(self.mode)
+        if self.mode != "off" and self.r < 2:
+            raise ValueError("redundancy requires r >= 2")
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                     # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: int = 0                  # 0 -> d_model // num_heads
+    # --- attention options ---
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int = 1024         # window for local_attn layers
+    attn_logit_softcap: float = 0.0
+    # --- layer pattern ---
+    block_pattern: Tuple[LayerSpec, ...] = (LayerSpec(),)
+    num_blocks: int = 0                # 0 -> num_layers // len(block_pattern)
+    remainder: Tuple[LayerSpec, ...] = ()
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    # pad the expert axis so it shards over the model axis (0 = off);
+    # padded experts are masked out of routing (§Perf iteration 2)
+    padded_num_experts: int = 0
+    # KV-cache storage dtype for decode shapes: "default" (= activation
+    # dtype) or "int8" (per-(batch,slot,head) absmax quantization —
+    # §Perf iteration 4: halves the decode memory term)
+    kv_cache_dtype: str = "default"
+    # MoE distribution: "gspmd" (scatter dispatch, compiler-chosen
+    # collectives) or "ep" (shard_map + explicit all_to_all expert
+    # parallelism; §Perf iteration 2)
+    moe_impl: str = "gspmd"
+
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0                  # routed-expert hidden size
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # --- SSM (Mamba-2 SSD) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 128
+    # --- hybrid (RG-LRU) ---
+    rglru_expand: int = 1
+    # --- enc-dec ---
+    num_encoder_layers: int = 0
+    # --- multimodal stub frontend ---
+    frontend: str = "none"             # none | vision | audio
+    frontend_tokens: int = 0           # prefix embeddings per sample (train)
+    # --- trust (the paper's technique) ---
+    redundancy: RedundancyConfig = RedundancyConfig()
+    # --- decode-cache sharding (set per input shape by launch/shapes) ---
+    # mesh axes carrying the full-attention cache's sequence dim; sharding
+    # the 32k/500k KV cache over "model" (and "data" when batch=1) is what
+    # makes long-context decode fit HBM (flash-decoding-style parallelism)
+    cache_seq_axes: Tuple[str, ...] = ("model",)
+    # batch=1 shapes (long_500k) cannot shard the batch axis
+    batch_shardable: bool = True
+    # gradient-accumulation microbatches for train_4k (activation memory)
+    train_microbatches: int = 1
+    # --- numerics ---
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    citation: str = ""
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.resolved_head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.resolved_head_dim
+
+    @property
+    def padded_vocab(self) -> int:
+        # pad so the vocab axis shards evenly over a 16-wide model axis
+        return _round_up(self.vocab_size, 256)
+
+    @property
+    def resolved_padded_experts(self) -> int:
+        return max(self.padded_num_experts, self.num_experts)
+
+    @property
+    def ssm_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_inner // self.ssm_head_dim
+
+    @property
+    def pattern_layers(self) -> Tuple[LayerSpec, ...]:
+        return self.block_pattern
+
+    @property
+    def resolved_num_blocks(self) -> int:
+        if self.num_blocks:
+            return self.num_blocks
+        return (self.num_layers - len(self.remainder)) // len(self.block_pattern)
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.num_encoder_layers > 0
+
+    @property
+    def attention_free(self) -> bool:
+        specs = self.block_pattern + self.remainder
+        return all(s.kind in ("ssm", "rglru") for s in specs)
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if no layer keeps an unbounded full-attention KV cache.
+
+        ``attn`` layers are quadratic/full-cache; ``local_attn`` caches only
+        the window; ``ssm``/``rglru`` carry O(1) state.  Models with *sparse*
+        global layers (gemma3 5:1) are treated as subquadratic-capable for
+        decode because the dominant cache is windowed and the rare global
+        caches shard over the mesh.
+        """
+        specs = self.block_pattern + self.remainder
+        n_global = sum(1 for s in specs if s.kind == "attn")
+        return n_global == 0 or (n_global / len(specs)) <= 0.2
+
+    def validate(self):
+        n = self.resolved_num_blocks * len(self.block_pattern) + len(self.remainder)
+        if n != self.num_layers:
+            raise ValueError(
+                f"{self.name}: pattern x blocks + remainder = {n} != num_layers {self.num_layers}")
+        if any(s.mlp == "moe" for s in self.block_pattern + self.remainder):
+            if not (self.num_experts and self.num_experts_per_tok and self.moe_d_ff):
+                raise ValueError(f"{self.name}: MoE layers need expert config")
+        return self
+
+
+def dense_pattern(n_layers: int, mlp: str = "dense") -> dict:
+    return dict(block_pattern=(LayerSpec("attn", mlp),), num_blocks=n_layers,
+                remainder=())

@@ -1,0 +1,172 @@
+"""Encoder-decoder backbone (Seamless-M4T-style, arXiv:2308.11596).
+
+The modality frontend (mel-spectrogram + conv feature extractor) is a
+STUB per the assignment: the encoder consumes precomputed frame
+embeddings (B, S_enc, d) supplied by ``input_specs``.  This module
+implements the transformer backbone: bidirectional encoder + causal
+decoder with cross-attention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.builder import Leaf, stack
+from repro.models.config import ModelConfig
+from repro.models.layers import (attn_decl, attn_decode, attn_train,
+                                 blockwise_attention, mlp_decl, rmsnorm,
+                                 rope, swiglu)
+
+
+def _enc_layer_decl(cfg):
+    return {
+        "norm1": Leaf((cfg.d_model,), ("embed",), "zeros"),
+        "attn": attn_decl(cfg),
+        "norm2": Leaf((cfg.d_model,), ("embed",), "zeros"),
+        "mlp": mlp_decl(cfg),
+    }
+
+
+def _dec_layer_decl(cfg):
+    return {
+        "norm1": Leaf((cfg.d_model,), ("embed",), "zeros"),
+        "attn": attn_decl(cfg),
+        "norm_x": Leaf((cfg.d_model,), ("embed",), "zeros"),
+        "xattn": attn_decl(cfg),
+        "norm2": Leaf((cfg.d_model,), ("embed",), "zeros"),
+        "mlp": mlp_decl(cfg),
+    }
+
+
+def encdec_decl(cfg: ModelConfig) -> dict:
+    return {
+        "embed": Leaf((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                      scale=0.02),
+        "enc_blocks": stack(_enc_layer_decl(cfg), cfg.num_encoder_layers),
+        "dec_blocks": stack(_dec_layer_decl(cfg), cfg.num_layers),
+        "enc_norm": Leaf((cfg.d_model,), ("embed",), "zeros"),
+        "final_norm": Leaf((cfg.d_model,), ("embed",), "zeros"),
+        "lm_head": Leaf((cfg.d_model, cfg.padded_vocab), ("embed", "vocab"),
+                        scale=0.02),
+    }
+
+
+def encdec_cache_decl(cfg: ModelConfig, batch: int, cache_len: int,
+                      memory_len: int) -> dict:
+    """Decoder self-attention KV cache + precomputed cross K/V."""
+    hd = cfg.resolved_head_dim
+    L = cfg.num_layers
+    self_kv = Leaf((L, batch, cache_len, cfg.num_kv_heads, hd),
+                   ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+                   "zeros")
+    cross_kv = Leaf((L, batch, memory_len, cfg.num_kv_heads, hd),
+                    ("layers", "batch", None, "kv_heads", "head_dim"),
+                    "zeros")
+    return {"self_k": self_kv, "self_v": self_kv,
+            "cross_k": cross_kv, "cross_v": cross_kv}
+
+
+def _cross_attn_train(p, x, memory, cfg, shard):
+    """x: (B, Sq, d) queries; memory: (B, Sk, d)."""
+    B, Sq, _ = x.shape
+    Sk = memory.shape[1]
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, Sq, cfg.num_heads, hd)
+    k = (memory @ p["wk"]).reshape(B, Sk, cfg.num_kv_heads, hd)
+    v = (memory @ p["wv"]).reshape(B, Sk, cfg.num_kv_heads, hd)
+    out = blockwise_attention(q, k, v, causal=False)
+    return out.reshape(B, Sq, cfg.q_dim) @ p["wo"]
+
+
+def encode(params, frames, cfg: ModelConfig, *, shard=None, remat=True,
+           unroll=False):
+    """frames: (B, S_enc, d) stub embeddings -> encoder memory."""
+    x = frames
+    if shard is not None:
+        x = shard(x, "batch", "seq", "embed")
+
+    def body(x, p):
+        h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+        x = x + attn_train(p["attn"], h, cfg, causal=False, shard=shard)
+        h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                       p["mlp"]["w_down"], shard=shard)
+        if shard is not None:
+            x = shard(x, "batch", "seq", "embed")
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    from repro.models.transformer import scan_or_unroll
+    x, _ = scan_or_unroll(body, x, params["enc_blocks"], unroll)
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward_train(params, frames, tokens, cfg: ModelConfig, *, shard=None,
+                  remat=True, unroll=False):
+    """Full enc-dec training forward.  frames: (B, S_enc, d) stub
+    embeddings; tokens: (B, S_dec).  Returns (logits, aux=0)."""
+    memory = encode(params, frames, cfg, shard=shard, remat=remat,
+                    unroll=unroll)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if shard is not None:
+        x = shard(x, "batch", "seq", "embed")
+
+    def body(x, p):
+        h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+        x = x + attn_train(p["attn"], h, cfg, causal=True, shard=shard)
+        h = rmsnorm(x, p["norm_x"], cfg.norm_eps)
+        x = x + _cross_attn_train(p["xattn"], h, memory, cfg, shard)
+        h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                       p["mlp"]["w_down"], shard=shard)
+        if shard is not None:
+            x = shard(x, "batch", "seq", "embed")
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    from repro.models.transformer import scan_or_unroll
+    x, _ = scan_or_unroll(body, x, params["dec_blocks"], unroll)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    if shard is not None:
+        logits = shard(logits, "batch", "seq", "vocab")
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def forward_decode(params, caches, tokens, pos, cfg: ModelConfig, *,
+                   shard=None, unroll=False):
+    """One decoder step against cached self-KV and precomputed cross-KV.
+    tokens: (B, 1).  Returns (logits, new_caches)."""
+    from repro.models.layers import attn_qkv, decode_attention
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    hd = cfg.resolved_head_dim
+
+    def body(x, inp):
+        p, sk, sv, ck, cv = inp
+        h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+        y, new_cache = attn_decode(p["attn"], h, {"k": sk, "v": sv}, pos,
+                                   cfg, shard=shard)
+        x = x + y
+        # cross-attention against precomputed memory K/V
+        h = rmsnorm(x, p["norm_x"], cfg.norm_eps)
+        q = (h @ p["xattn"]["wq"]).reshape(B, 1, cfg.num_heads, hd)
+        mem_len = ck.shape[1]
+        y = decode_attention(q, ck, cv, jnp.int32(mem_len - 1))
+        x = x + y.reshape(B, 1, cfg.q_dim) @ p["xattn"]["wo"]
+        h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                       p["mlp"]["w_down"], shard=shard)
+        return x, (new_cache["k"], new_cache["v"])
+
+    from repro.models.transformer import scan_or_unroll
+    x, (new_k, new_v) = scan_or_unroll(
+        body, x, (params["dec_blocks"], caches["self_k"], caches["self_v"],
+                  caches["cross_k"], caches["cross_v"]), unroll)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    new_caches = dict(caches)
+    new_caches["self_k"], new_caches["self_v"] = new_k, new_v
+    return logits, new_caches

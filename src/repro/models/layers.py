@@ -1,0 +1,278 @@
+"""Core transformer layers: RMSNorm, RoPE, (blockwise) attention, SwiGLU.
+
+Attention for training/prefill is *blockwise with online softmax* (a pure
+jnp twin of the Pallas flash kernel): memory is O(S * chunk), never
+O(S^2), which is what lets prefill_32k lower/compile within HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.builder import Leaf
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- norms
+def rmsnorm(x, weight, eps=1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+# ------------------------------------------------------------------ rope
+def rope(x, positions, theta=10_000.0):
+    """x: (..., S, H, D) rotated at absolute ``positions`` (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention
+def _softcap(scores, cap):
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def blockwise_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        q_offset=0, q_chunk=512, kv_chunk=512):
+    """Online-softmax attention.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KH, D) with H = KH * G.
+    ``window`` > 0 limits attention to the last ``window`` keys (sliding
+    window, inclusive of self).  ``q_offset``: absolute position of q[0]
+    relative to k[0] (for chunked prefill; 0 for plain self-attention).
+    Returns (B, Sq, H, D).
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, KH, _ = k.shape
+    G = H // KH
+    scale = D ** -0.5
+
+    def _pick(S, c):  # largest divisor of S that is <= c
+        c = min(c, S)
+        while S % c:
+            c -= 1
+        return c
+
+    q_chunk = _pick(Sq, q_chunk)
+    kv_chunk = _pick(Sk, kv_chunk)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+
+    qc = q.reshape(B, nq, q_chunk, KH, G, D)
+    kc = k.reshape(B, nk, kv_chunk, KH, D)
+    vc = v.reshape(B, nk, kv_chunk, KH, D)
+
+    def q_step(_, qi):
+        qblk = qc[:, qi]  # (B, qc, KH, G, D)
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        @jax.checkpoint  # flash-style: recompute scores/probs in backward
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kblk, vblk = kc[:, ki], vc[:, ki]
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            s = _softcap(s, softcap)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vblk,
+                preferred_element_type=jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, KH, G, q_chunk, D), jnp.float32)
+        m0 = jnp.full((B, KH, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)  # (B, KH, G, qc, D)
+
+    _, outs = jax.lax.scan(jax.checkpoint(q_step), None, jnp.arange(nq))
+    # outs: (nq, B, KH, G, qc, D) -> (B, Sq, H, D)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq, H, q_chunk, D)
+    out = out.transpose(0, 1, 3, 2, 4).reshape(B, Sq, H, D)
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0, softcap=0.0):
+    """Single-token attention against a cache.
+
+    q: (B, 1, H, D); caches: (B, cap, KH, D); pos: scalar int32 — number of
+    tokens already in the cache *including* the one just written at
+    ``pos % cap`` (ring) or ``pos`` (linear).  Entries with absolute index
+    > pos or <= pos - window are masked.
+    """
+    B, cap, KH, D = k_cache.shape
+    H = q.shape[2]
+    G = H // KH
+    scale = D ** -0.5
+    qh = q.reshape(B, KH, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qh, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = _softcap(s, softcap)
+    slot = jnp.arange(cap)
+    if window:  # ring buffer: absolute index of slot i
+        absidx = pos - ((pos - slot) % cap)
+        valid = (absidx >= 0) & (absidx <= pos) & (absidx > pos - window)
+    else:
+        valid = slot <= pos
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, D)
+
+
+# ----------------------------------------------------------------- MLP
+def swiglu(x, w_gate, w_up, w_down, shard=None):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    if shard is not None:
+        h = shard(h, "batch", "seq", "ff")
+    return h @ w_down
+
+
+# ------------------------------------------------------- declarations
+def attn_decl(cfg) -> dict:
+    d, qd, kvd, hd = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.resolved_head_dim
+    decl = {
+        "wq": Leaf((d, qd), ("embed", "q_dim")),
+        "wk": Leaf((d, kvd), ("embed", "kv_dim")),
+        "wv": Leaf((d, kvd), ("embed", "kv_dim")),
+        "wo": Leaf((qd, d), ("q_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        decl["bq"] = Leaf((qd,), ("q_dim",), "zeros")
+        decl["bk"] = Leaf((kvd,), ("kv_dim",), "zeros")
+        decl["bv"] = Leaf((kvd,), ("kv_dim",), "zeros")
+    if cfg.qk_norm:
+        decl["q_norm"] = Leaf((hd,), ("head_dim",), "zeros")
+        decl["k_norm"] = Leaf((hd,), ("head_dim",), "zeros")
+    return decl
+
+
+def mlp_decl(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": Leaf((d, f), ("embed", "ff")),
+        "w_up": Leaf((d, f), ("embed", "ff")),
+        "w_down": Leaf((f, d), ("ff", "embed")),
+    }
+
+
+# -------------------------------------------------------------- apply
+def attn_qkv(params, x, positions, cfg):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_train(params, x, cfg, *, window=0, causal=True, shard=None,
+               q_chunk=512, kv_chunk=512):
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = attn_qkv(params, x, positions, cfg)
+    # note: no explicit q/k/v constraints here — GSPMD propagates the head
+    # sharding from the (q_dim/kv_dim)-sharded projection weights, which
+    # handles GQA counts that don't divide the model axis.
+    out = blockwise_attention(q, k, v, causal=causal, window=window,
+                              softcap=cfg.attn_logit_softcap,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return out.reshape(B, S, cfg.q_dim) @ params["wo"]
+
+
+def _quantize_kv(t):
+    """t: (B, 1, KH, D) -> (int8 values, (B, 1, KH) f32 scales)."""
+    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def attn_decode(params, x, cache, pos, cfg, *, window=0, shard=None):
+    """One-token decode. cache: {"k": (B,cap,KH,D), "v": ...} (+ optional
+    int8 "k_scale"/"v_scale" when cfg.kv_cache_dtype == "int8").
+    Returns (out, new_cache)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = attn_qkv(params, x, positions, cfg)
+    cap = cache["k"].shape[1]
+    slot = (pos % cap) if window else jnp.minimum(pos, cap - 1)
+    kv_seq_ax = "cache_seq" if not window else "kv_seq"
+    quantized = "k_scale" in cache
+    if quantized:  # §Perf iteration 4: int8 cache halves HBM cache reads
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot,
+                                                     axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot,
+                                                     axis=1),
+            "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], ks, slot, axis=1),
+            "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], vs, slot, axis=1),
+        }
+        if shard is not None:
+            new_cache["k"] = shard(new_cache["k"], "batch", kv_seq_ax,
+                                   "kv_heads", "head_dim")
+            new_cache["v"] = shard(new_cache["v"], "batch", kv_seq_ax,
+                                   "kv_heads", "head_dim")
+        k_cache = (new_cache["k"].astype(jnp.float32)
+                   * new_cache["k_scale"][..., None]).astype(x.dtype)
+        v_cache = (new_cache["v"].astype(jnp.float32)
+                   * new_cache["v_scale"][..., None]).astype(x.dtype)
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot,
+                                                      axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot,
+                                                      axis=1)
+        if shard is not None:
+            k_cache = shard(k_cache, "batch", kv_seq_ax, "kv_heads",
+                            "head_dim")
+            v_cache = shard(v_cache, "batch", kv_seq_ax, "kv_heads",
+                            "head_dim")
+        new_cache = {"k": k_cache, "v": v_cache}
+    out = decode_attention(q, k_cache, v_cache, pos, window=window,
+                           softcap=cfg.attn_logit_softcap)
+    out = out.reshape(B, 1, cfg.q_dim) @ params["wo"]
+    return out, new_cache

@@ -1,0 +1,83 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427).
+
+Recurrence: a_t = exp(-c * softplus(Lambda) * sigmoid(W_r x_t)),
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (sigmoid(W_i x_t) * x_t).
+Training uses ``lax.associative_scan`` (log-depth); decode carries the
+hidden state — O(1) memory, so recurrentgemma runs ``long_500k``.
+
+Block structure (simplified Griffin recurrent block): two branches from
+the residual stream — (conv1d -> RG-LRU) and a GeLU gate — multiplied and
+projected back.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.builder import Leaf
+
+_C = 8.0
+
+
+def rglru_decl(cfg) -> dict:
+    d = cfg.d_model
+    inner = cfg.rglru_expand * d
+    w = cfg.ssm_conv_width
+    return {
+        "w_in": Leaf((d, inner), ("embed", "rglru_inner")),
+        "w_gate_branch": Leaf((d, inner), ("embed", "rglru_inner")),
+        "conv": Leaf((w, inner), ("conv", "rglru_inner"), scale=0.5),
+        "w_r": Leaf((inner, inner), ("rglru_inner", None), scale=0.02),
+        "w_i": Leaf((inner, inner), ("rglru_inner", None), scale=0.02),
+        "lam": Leaf((inner,), ("rglru_inner",), "constant", scale=0.7),
+        "w_out": Leaf((inner, d), ("rglru_inner", "embed")),
+    }
+
+
+def _gates(params, x):
+    """x: (..., inner) -> (log_a, gated_input), both (..., inner), f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ params["w_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, gated
+
+
+def rglru_scan(a, b):
+    """h_t = a_t * h_{t-1} + b_t over axis 1 via associative scan.
+    a, b: (B, S, C) f32.  Returns h: (B, S, C)."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, b1 * a2 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_train(params, x, cfg, shard=None):
+    """x: (B, S, d) -> (B, S, d)."""
+    gate = jax.nn.gelu(x @ params["w_gate_branch"])
+    u = x @ params["w_in"]
+    from repro.models.ssm import _causal_conv
+    u = _causal_conv(u, params["conv"])
+    if shard is not None:
+        u = shard(u, "batch", "seq", "rglru_inner")
+        gate = shard(gate, "batch", "seq", "rglru_inner")
+    a, b = _gates(params, u)
+    h = rglru_scan(a, b).astype(x.dtype)
+    return (h * gate) @ params["w_out"]
+
+
+def rglru_decode(params, x, cache, cfg, shard=None):
+    """One token. cache = {"h": (B, inner) f32, "conv": (B, W-1, inner)}."""
+    xt = x[:, 0]
+    gate = jax.nn.gelu(xt @ params["w_gate_branch"])
+    pre = xt @ params["w_in"]
+    hist = jnp.concatenate([cache["conv"], pre[:, None]], axis=1)
+    u = (hist * params["conv"][None]).sum(axis=1)
+    a, b = _gates(params, u)
+    h = a * cache["h"] + b
+    out = ((h.astype(x.dtype) * gate) @ params["w_out"])[:, None]
+    return out, {"h": h, "conv": hist[:, 1:]}

@@ -1,0 +1,153 @@
+"""Mamba-2 SSD (state-space duality, arXiv:2405.21060) layer.
+
+Training/prefill uses the chunked dual form: within-chunk quadratic
+(attention-like) term + inter-chunk recurrence on the (H, P, N) state,
+scanned over chunks with ``lax.scan``.  Decode is a single-token state
+update with O(1) memory — this is why mamba2 is a ``long_500k`` arch.
+
+The within-chunk dual form is the Pallas ``ssd_scan`` kernel target; the
+jnp code here is its oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.builder import Leaf
+from repro.models.layers import rmsnorm
+
+
+def ssm_decl(cfg) -> dict:
+    d, inner, N, H = cfg.d_model, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.ssm_conv_width
+    return {
+        "wz": Leaf((d, inner), ("embed", "ssm_inner")),
+        "wx": Leaf((d, inner), ("embed", "ssm_inner")),
+        "wB": Leaf((d, N), ("embed", "state")),
+        "wC": Leaf((d, N), ("embed", "state")),
+        "wdt": Leaf((d, H), ("embed", "ssm_heads")),
+        "conv_x": Leaf((w, inner), ("conv", "ssm_inner"), scale=0.5),
+        "conv_B": Leaf((w, N), ("conv", "state"), scale=0.5),
+        "conv_C": Leaf((w, N), ("conv", "state"), scale=0.5),
+        "A_log": Leaf((H,), ("ssm_heads",), "zeros"),
+        "D": Leaf((H,), ("ssm_heads",), "ones"),
+        "dt_bias": Leaf((H,), ("ssm_heads",), "zeros"),
+        "norm": Leaf((inner,), ("ssm_inner",), "zeros"),
+        "out_proj": Leaf((inner, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv. x: (B, S, C); w: (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return out
+
+
+def ssd_chunked(x, dt, A, Bmat, Cmat, state0, chunk):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H); A: (H,) (negative);
+    Bmat, Cmat: (B, S, N) (single group, shared across heads);
+    state0: (B, H, P, N).  Returns (y (B,S,H,P), state (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    nchunks = S // chunk
+    da = dt * A  # (B, S, H), negative
+
+    xc = x.reshape(Bsz, nchunks, chunk, H, P)
+    dtc = dt.reshape(Bsz, nchunks, chunk, H)
+    dac = da.reshape(Bsz, nchunks, chunk, H)
+    Bc = Bmat.reshape(Bsz, nchunks, chunk, N)
+    Cc = Cmat.reshape(Bsz, nchunks, chunk, N)
+
+    @jax.checkpoint  # recompute the within-chunk dual form in backward
+    def step(state, ci):
+        xq, dtq, daq, Bq, Cq = (xc[:, ci], dtc[:, ci], dac[:, ci],
+                                Bc[:, ci], Cc[:, ci])
+        cum = jnp.cumsum(daq, axis=1)  # (B, Q, H)
+        # intra-chunk (dual / attention-like) term; mask BEFORE exp —
+        # above-diagonal seg is positive and overflows, and the vjp of
+        # where(mask, exp(inf), 0) is inf * 0 = NaN
+        seg = cum[:, :, None, :] - cum[:, None, :, :]  # (B, Q, Q, H)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))[None, :, :, None]
+        L = jnp.where(causal, jnp.exp(jnp.where(causal, seg, 0.0)), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", Cq, Bq)[..., None] * L \
+            * dtq[:, None, :, :]  # (B, Q, Q, H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", scores, xq)
+        # inter-chunk term from carried state
+        y_inter = jnp.exp(cum)[..., None] * jnp.einsum(
+            "bin,bhpn->bihp", Cq, state)
+        # state update
+        total = cum[:, -1:, :]  # (B, 1, H)
+        w = jnp.exp(total - cum) * dtq  # (B, Q, H)
+        ds = jnp.einsum("bqh,bqhp,bqn->bhpn", w, xq, Bq)
+        state = jnp.exp(total[:, 0])[:, :, None, None] * state + ds
+        return state, y_intra + y_inter
+
+    state, ys = jax.lax.scan(step, state0, jnp.arange(nchunks))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, H, P)
+    return y, state
+
+
+def ssm_train(params, x, cfg, shard=None):
+    """x: (B, S, d) -> (B, S, d). Full-sequence (train/prefill) path."""
+    B, S, d = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = x @ params["wz"]
+    xin = _causal_conv(x @ params["wx"], params["conv_x"])
+    Bmat = _causal_conv(x @ params["wB"], params["conv_B"])
+    Cmat = _causal_conv(x @ params["wC"], params["conv_C"])
+    xin = jax.nn.silu(xin)
+    Bmat, Cmat = jax.nn.silu(Bmat), jax.nn.silu(Cmat)
+    dt = jax.nn.softplus(x @ params["wdt"] + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    if shard is not None:
+        xin = shard(xin, "batch", "seq", "ssm_inner")
+        z = shard(z, "batch", "seq", "ssm_inner")
+    xh = xin.reshape(B, S, H, P)
+    state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    y, _ = ssd_chunked(xh.astype(jnp.float32), dt.astype(jnp.float32), A,
+                       Bmat.astype(jnp.float32), Cmat.astype(jnp.float32),
+                       state0, min(cfg.ssm_chunk, S))
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(B, S, H * P).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return y @ params["out_proj"]
+
+
+def ssm_decode(params, x, cache, cfg, shard=None):
+    """One-token decode. x: (B, 1, d).
+    cache = {"state": (B,H,P,N) f32, "conv": (B, W-1, inner+2N)}.
+    Returns (out (B,1,d), new_cache)."""
+    B = x.shape[0]
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    W = cfg.ssm_conv_width
+    xt = x[:, 0]
+    z = xt @ params["wz"]
+    pre = jnp.concatenate([xt @ params["wx"], xt @ params["wB"],
+                           xt @ params["wC"]], axis=-1)  # (B, inner+2N)
+    hist = jnp.concatenate([cache["conv"], pre[:, None]], axis=1)  # (B,W,·)
+    wfull = jnp.concatenate([params["conv_x"], params["conv_B"],
+                             params["conv_C"]], axis=-1)  # (W, inner+2N)
+    conv_out = (hist * wfull[None]).sum(axis=1)
+    inner = cfg.ssm_inner
+    xin = jax.nn.silu(conv_out[:, :inner])
+    Bmat = jax.nn.silu(conv_out[:, inner:inner + N])
+    Cmat = jax.nn.silu(conv_out[:, inner + N:])
+    dt = jax.nn.softplus(xt @ params["wdt"] + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * A)  # (B,H)
+    xh = xin.reshape(B, H, P).astype(jnp.float32)
+    state = cache["state"] * da[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt.astype(jnp.float32), xh,
+        Bmat.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", Cmat.astype(jnp.float32), state)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, H * P).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = (y @ params["out_proj"])[:, None]
+    new_cache = {"state": state, "conv": hist[:, 1:]}
+    return out, new_cache

@@ -1,0 +1,277 @@
+"""Decoder-only model: scan-over-layers stack handling every layer kind
+(attn / local_attn / rglru / ssm) x (dense / moe / none) MLP.
+
+Parameters, KV-caches and inputs are all declared with
+``repro.models.builder`` so they materialize identically as real arrays
+(tests), ShapeDtypeStructs (dry-run) and PartitionSpecs (pjit).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.builder import Leaf, stack
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.layers import (attn_decl, attn_decode, attn_train,
+                                 mlp_decl, rmsnorm, swiglu)
+
+
+# ------------------------------------------------------------- decls
+def layer_decl(spec: LayerSpec, cfg: ModelConfig) -> dict:
+    decl = {"norm1": Leaf((cfg.d_model,), ("embed",), "zeros")}
+    if spec.kind in ("attn", "local_attn"):
+        decl["attn"] = attn_decl(cfg)
+    elif spec.kind == "rglru":
+        decl["rglru"] = rglru_lib.rglru_decl(cfg)
+    elif spec.kind == "ssm":
+        decl["ssm"] = ssm_lib.ssm_decl(cfg)
+    else:
+        raise ValueError(spec.kind)
+    if spec.mlp != "none":
+        decl["norm2"] = Leaf((cfg.d_model,), ("embed",), "zeros")
+        decl["moe" if spec.mlp == "moe" else "mlp"] = (
+            moe_lib.moe_decl(cfg) if spec.mlp == "moe" else mlp_decl(cfg))
+    return decl
+
+
+def model_decl(cfg: ModelConfig) -> dict:
+    nb = cfg.resolved_num_blocks
+    decl = {
+        "embed": Leaf((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                      scale=0.02),
+        "final_norm": Leaf((cfg.d_model,), ("embed",), "zeros"),
+        "blocks": {str(i): stack(layer_decl(s, cfg), nb)
+                   for i, s in enumerate(cfg.block_pattern)},
+    }
+    if cfg.remainder:
+        decl["remainder"] = [layer_decl(s, cfg) for s in cfg.remainder]
+    if not cfg.tie_embeddings:
+        decl["lm_head"] = Leaf((cfg.d_model, cfg.padded_vocab),
+                               ("embed", "vocab"), scale=0.02)
+    return decl
+
+
+def _attn_cache_decl(cfg: ModelConfig, batch: int, cache_len: int,
+                     window: int) -> dict:
+    cap = min(window, cache_len) if window else cache_len
+    seq_ax = "kv_seq" if window else "cache_seq"
+    shape = (batch, cap, cfg.num_kv_heads, cfg.resolved_head_dim)
+    axes = ("batch", seq_ax, "kv_heads", "head_dim")
+    if cfg.kv_cache_dtype == "int8":
+        # §Perf iteration 4: absmax-quantized cache + per-slot-head scales
+        sshape = (batch, cap, cfg.num_kv_heads)
+        saxes = ("batch", seq_ax, "kv_heads")
+        return {"k": Leaf(shape, axes, "zeros", dtype="int8"),
+                "v": Leaf(shape, axes, "zeros", dtype="int8"),
+                "k_scale": Leaf(sshape, saxes, "zeros", dtype="float32"),
+                "v_scale": Leaf(sshape, saxes, "zeros", dtype="float32")}
+    return {"k": Leaf(shape, axes, "zeros"), "v": Leaf(shape, axes, "zeros")}
+
+
+def _layer_cache_decl(spec: LayerSpec, cfg: ModelConfig, batch: int,
+                      cache_len: int) -> dict:
+    if spec.kind == "attn":
+        return _attn_cache_decl(cfg, batch, cache_len, 0)
+    if spec.kind == "local_attn":
+        return _attn_cache_decl(cfg, batch, cache_len, cfg.sliding_window)
+    if spec.kind == "rglru":
+        inner = cfg.rglru_expand * cfg.d_model
+        return {
+            "h": Leaf((batch, inner), ("batch", "rglru_inner"), "zeros"),
+            "conv": Leaf((batch, cfg.ssm_conv_width - 1, inner),
+                         ("batch", "conv", "rglru_inner"), "zeros"),
+        }
+    if spec.kind == "ssm":
+        H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        convdim = cfg.ssm_inner + 2 * N
+        return {
+            "state": Leaf((batch, H, P, N),
+                          ("batch", "ssm_heads", None, "state"), "zeros"),
+            "conv": Leaf((batch, cfg.ssm_conv_width - 1, convdim),
+                         ("batch", "conv", None), "zeros"),
+        }
+    raise ValueError(spec.kind)
+
+
+def cache_decl(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    nb = cfg.resolved_num_blocks
+    decl = {"blocks": {str(i): stack(_layer_cache_decl(s, cfg, batch, cache_len), nb)
+                       for i, s in enumerate(cfg.block_pattern)}}
+    if cfg.remainder:
+        decl["remainder"] = [_layer_cache_decl(s, cfg, batch, cache_len)
+                             for s in cfg.remainder]
+    return decl
+
+
+# ------------------------------------------------------------- apply
+def scan_or_unroll(body, carry, xs, unroll: bool):
+    """lax.scan, or a Python loop over the leading axis (``unroll=True``).
+
+    The dry-run unrolls the layer stack because XLA's cost_analysis
+    counts a while-loop body once — unrolling yields correct per-layer
+    FLOPs/bytes/collective accounting (inner chunk scans are corrected
+    analytically in launch/roofline.py)."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    nb = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(nb):
+        sl = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, sl)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _layer_train(spec: LayerSpec, p, x, cfg, shard, trust, chunks):
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if spec.kind in ("attn", "local_attn"):
+        window = cfg.sliding_window if spec.kind == "local_attn" else 0
+        y = attn_train(p["attn"], h, cfg, window=window, shard=shard,
+                       q_chunk=chunks[0], kv_chunk=chunks[1])
+    elif spec.kind == "rglru":
+        y = rglru_lib.rglru_train(p["rglru"], h, cfg, shard=shard)
+    elif spec.kind == "ssm":
+        y = ssm_lib.ssm_train(p["ssm"], h, cfg, shard=shard)
+    x = x + y
+    if shard is not None:
+        x = shard(x, "batch", "seq", "embed")
+    aux = jnp.zeros((), jnp.float32)
+    if spec.mlp != "none":
+        h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        if spec.mlp == "moe":
+            if (cfg.moe_impl == "ep" and shard is not None
+                    and shard.mesh is not None):
+                from repro.models.moe_ep import moe_mlp_ep
+                y, aux = moe_mlp_ep(p["moe"], h, cfg, shard.mesh,
+                                    shard.rules, fsdp=shard.fsdp,
+                                    attack=shard.attack)
+            else:
+                y, aux = moe_lib.moe_mlp(p["moe"], h, cfg, shard=shard,
+                                         trust=trust)
+        else:
+            y = swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                       p["mlp"]["w_down"], shard=shard)
+        x = x + y
+        if shard is not None:
+            x = shard(x, "batch", "seq", "embed")
+    return x, aux
+
+
+def forward_train(params, tokens, cfg: ModelConfig, *, shard=None,
+                  trust=None, prefix_embeds=None, remat=True,
+                  q_chunk=512, kv_chunk=512, unroll=False):
+    """tokens: (B, S_text) int32; prefix_embeds: optional (B, P, d) stub
+    modality embeddings prepended to the sequence (VLM early fusion).
+    Returns (logits (B, S, V), aux_loss)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    if shard is not None:
+        x = shard(x, "batch", "seq", "embed")
+    chunks = (q_chunk, kv_chunk)
+
+    def body(carry, blk):
+        x, aux = carry
+        for i, spec in enumerate(cfg.block_pattern):
+            x, a = _layer_train(spec, blk[str(i)], x, cfg, shard, trust,
+                                chunks)
+            aux = aux + a
+        return (x, aux), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = scan_or_unroll(body, (x, jnp.zeros((), jnp.float32)),
+                                 params["blocks"], unroll)
+    for i, spec in enumerate(cfg.remainder):
+        x, a = _layer_train(spec, params["remainder"][i], x, cfg, shard,
+                            trust, chunks)
+        aux = aux + a
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head
+    if shard is not None:
+        logits = shard(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+def _layer_decode(spec: LayerSpec, p, cache, x, pos, cfg, shard):
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if spec.kind in ("attn", "local_attn"):
+        window = cfg.sliding_window if spec.kind == "local_attn" else 0
+        y, new_cache = attn_decode(p["attn"], h, cache, pos, cfg,
+                                   window=window, shard=shard)
+    elif spec.kind == "rglru":
+        y, new_cache = rglru_lib.rglru_decode(p["rglru"], h, cache, cfg,
+                                              shard=shard)
+    elif spec.kind == "ssm":
+        y, new_cache = ssm_lib.ssm_decode(p["ssm"], h, cache, cfg,
+                                          shard=shard)
+    x = x + y
+    if spec.mlp != "none":
+        h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        if spec.mlp == "moe":
+            y, _ = moe_lib.moe_mlp(p["moe"], h, cfg, shard=shard)
+        else:
+            y = swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                       p["mlp"]["w_down"], shard=shard)
+        x = x + y
+    return x, new_cache
+
+
+def forward_decode(params, caches, tokens, pos, cfg: ModelConfig, *,
+                   shard=None, unroll=False):
+    """One decode step.  tokens: (B, 1); pos: scalar int32 (absolute
+    position of this token).  Returns (logits (B, 1, V), new_caches)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if shard is not None:
+        x = shard(x, "batch", "seq", "embed")
+
+    def body(x, inp):
+        blk, cch = inp
+        new_cch = {}
+        for i, spec in enumerate(cfg.block_pattern):
+            x, new_cch[str(i)] = _layer_decode(spec, blk[str(i)], cch[str(i)],
+                                               x, pos, cfg, shard)
+        return x, new_cch
+
+    x, new_block_caches = scan_or_unroll(
+        body, x, (params["blocks"], caches["blocks"]), unroll)
+    new_caches = {"blocks": new_block_caches}
+    if cfg.remainder:
+        new_caches["remainder"] = []
+        for i, spec in enumerate(cfg.remainder):
+            x, nc = _layer_decode(spec, params["remainder"][i],
+                                  caches["remainder"][i], x, pos, cfg, shard)
+            new_caches["remainder"].append(nc)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head
+    return logits, new_caches
+
+
+def lm_loss(logits, labels, mask=None):
+    """Cross-entropy; labels: (B, S) int32, positions with label < 0 are
+    ignored (e.g. the VLM image-prefix region).
+
+    Written vocab-sharding-friendly: logsumexp + one-hot contraction both
+    reduce over the (model-sharded) vocab axis via psum — no all-gather of
+    the logits, no full-vocab gather."""
+    valid = labels >= 0 if mask is None else mask & (labels >= 0)
+    labels = jnp.maximum(labels, 0)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = (jnp.arange(logits.shape[-1])[None, None, :] ==
+              labels[..., None])
+    picked = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    ll = picked - lse
+    denom = jnp.maximum(valid.sum(), 1)
+    return -(ll * valid).sum() / denom

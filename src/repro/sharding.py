@@ -1,0 +1,146 @@
+"""Logical-axis sharding rules.
+
+Model code annotates params and activations with *logical* axis names
+("batch", "vocab", "ff", "experts", ...).  This module maps them to mesh
+axes for whatever mesh is in play:
+
+  single-pod        (data=16, model=16)
+  multi-pod         (pod=2, data=16, model=16)     # pod folds into batch
+  trusted (B-MoE)   (data=16/r, replica=r, model=16)
+  CPU tests         mesh=None -> every annotation is a no-op
+
+The "replica" axis is *never* assigned to a logical axis: replicas hold
+identical copies of the batch shard (the paper's redundancy mechanism) and
+only the consensus-vote shard_map communicates across it.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def logical_rules(mesh: Optional[Mesh], cfg=None, params: bool = False) -> dict:
+    """Activation rules (default) or parameter rules (``params=True``).
+
+    Parameter rules additionally shard the ``embed`` dim over the batch
+    axes — FSDP/ZeRO-3: every weight (and its AdamW state) splits over
+    data x model, and XLA all-gathers shards per layer.  Without this a
+    400B-param MoE cannot fit 16 GB/chip at 16-way model parallelism.
+    Activations keep ``embed`` unsharded (their batch dim already carries
+    the data axes)."""
+    if mesh is None:
+        return {}
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch = tuple(a for a in ("pod", "data") if a in axes) or None
+    if cfg is not None and not getattr(cfg, "batch_shardable", True):
+        batch = None
+    model = "model" if "model" in axes else None
+    msize = axes.get("model", 1)
+
+    def _iff_divides(n):  # shard an axis only when it divides the mesh axis
+        return model if (model and n and n % msize == 0) else None
+
+    rules = {
+        "batch": batch,
+        "seq": None,
+        "embed": None,
+        "layers": None,
+        "vocab": model,
+        "q_dim": model,
+        "kv_dim": model,
+        "heads": _iff_divides(getattr(cfg, "num_heads", 0)),
+        "kv_heads": _iff_divides(getattr(cfg, "num_kv_heads", 0)),
+        "head_dim": None,
+        "ff": model,
+        "ssm_inner": model,
+        "ssm_heads": _iff_divides(getattr(cfg, "ssm_heads", 0) if cfg else 0),
+        "rglru_inner": model,
+        "state": None,
+        "conv": None,
+        "kv_seq": _iff_divides(getattr(cfg, "sliding_window", 0)),
+        "cache_seq": None,
+    }
+    # Expert parallelism: shard the expert axis when it divides the model
+    # axis; otherwise fall back to tensor parallelism inside each expert.
+    if cfg is not None and getattr(cfg, "num_experts", 0):
+        n_exp = getattr(cfg, "resolved_padded_experts", cfg.num_experts)
+        if n_exp % msize == 0:
+            rules["experts"] = model
+            rules["moe_ff"] = None
+        else:
+            rules["experts"] = None
+            rules["moe_ff"] = model
+    else:
+        rules["experts"] = None
+        rules["moe_ff"] = model
+    # Decode caches: the sequence dim shards over the axes named by the
+    # config (launch/shapes sets ("model",) for batched decode and
+    # ("data", "model") for batch=1 long-context decode).
+    cache_axes = tuple(a for a in getattr(cfg, "cache_seq_axes", ("model",))
+                       if a in axes) if cfg is not None else ()
+    rules["cache_seq"] = cache_axes or None
+    if "model" in cache_axes:
+        # one spec may use each mesh axis once: the cache shards its seq
+        # dim over model, so its kv_heads dim must stay unsharded
+        rules["kv_heads"] = None
+    if params:
+        fsdp = tuple(a for a in ("pod", "data") if a in axes) or None
+        d_model = getattr(cfg, "d_model", 0) if cfg is not None else 0
+        n_fsdp = 1
+        for a in (fsdp or ()):
+            n_fsdp *= axes[a]
+        if fsdp and d_model and d_model % n_fsdp == 0:
+            rules["embed"] = fsdp
+    return rules
+
+
+def use_fsdp(cfg, kind: str, model_shards: int = 16,
+             hbm_budget: float = 9e9) -> bool:
+    """FSDP (param embed-dim over data) policy per step kind.
+
+    Training always FSDPs (optimizer state forces it).  Decode/prefill
+    re-gather params every step, which dominated decode collectives
+    (§Perf iteration 1: qwen3-32b decode_32k collective bytes dropped
+    102x by replicating params over data) — so inference uses FSDP only
+    when the replicated per-device params would not fit."""
+    if kind == "train":
+        return True
+    try:
+        from repro.launch.costmodel import param_counts
+        per_dev = param_counts(cfg)["total"] * 2 / model_shards  # bf16
+    except Exception:
+        return True
+    return per_dev > hbm_budget
+
+
+class Sharder:
+    """Applies with_sharding_constraint for logical axis names; no-op when
+    mesh is None (CPU-scale tests)."""
+
+    def __init__(self, mesh: Optional[Mesh] = None, rules: Optional[dict] = None,
+                 fsdp: bool = True, attack=None):
+        self.mesh = mesh
+        self.rules = rules if rules is not None else logical_rules(mesh)
+        self.fsdp = fsdp        # whether params carry FSDP (embed-over-data)
+        self.attack = attack    # LMAttack for trusted-MoE robustness tests
+
+    def spec(self, *axes) -> P:
+        return P(*[self.rules.get(a) if a is not None else None for a in axes])
+
+    def __call__(self, x, *axes):
+        if self.mesh is None:
+            return x
+        if len(axes) != x.ndim:
+            raise ValueError(f"{len(axes)} axes for rank-{x.ndim} value")
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(*axes)))
+
+    def named(self, spec: P) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+
+NO_SHARD = Sharder(None)

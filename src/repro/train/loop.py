@@ -1,0 +1,47 @@
+"""Training loop (CPU-scale demo driver and integration-test harness)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.models import encdec, transformer as tfm
+from repro.models.builder import materialize
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.train.step import make_train_step
+
+
+def init_model(cfg: ModelConfig, seed: int = 0, dtype=None):
+    import jax.numpy as jnp
+    decl = (encdec.encdec_decl(cfg) if cfg.is_encoder_decoder
+            else tfm.model_decl(cfg))
+    return materialize(decl, jax.random.PRNGKey(seed),
+                       dtype or jnp.float32)
+
+
+def train(cfg: ModelConfig, batches: Iterator[dict], steps: int, *,
+          opt_cfg: Optional[adamw.AdamWConfig] = None, seed: int = 0,
+          mesh=None, log_every: int = 10, remat=False,
+          callback: Optional[Callable] = None):
+    """Returns (params, history). ``batches`` yields dicts with tokens/
+    labels (+frames/patches per family)."""
+    opt_cfg = opt_cfg or adamw.AdamWConfig(total_steps=steps)
+    params = init_model(cfg, seed)
+    opt_state = adamw.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, mesh, remat=remat))
+    history = []
+    t0 = time.time()
+    for step in range(steps):
+        batch = next(batches)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall_s"] = time.time() - t0
+            history.append(m)
+            if callback:
+                callback(m)
+    return params, history

@@ -1,0 +1,28 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the
+real (1-device) CPU; multi-device tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+@pytest.fixture(scope="session")
+def repo_src():
+    return os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+
+
+def run_with_devices(code: str, n_devices: int, repo_src: str,
+                     timeout: int = 600) -> str:
+    """Run ``code`` in a subprocess with n virtual CPU devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n_devices}")
+    env["PYTHONPATH"] = repo_src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout

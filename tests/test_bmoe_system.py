@@ -1,0 +1,118 @@
+"""End-to-end B-MoE system behaviour (the paper's claims, miniaturized)."""
+import numpy as np
+import pytest
+
+from repro.core.attacks import AttackConfig
+from repro.core.bmoe import BMoEConfig, BMoESystem
+from repro.data.synthetic import FMNIST, make_image_dataset
+
+
+@pytest.fixture(scope="module")
+def data():
+    xtr, ytr, xte, yte = make_image_dataset(FMNIST, n_train=2000, n_test=500,
+                                            seed=0)
+    return (xtr.reshape(len(xtr), -1), ytr,
+            xte.reshape(len(xte), -1), yte)
+
+
+def _train(framework, attack, data, rounds=30, seed=0):
+    xtr, ytr, _, _ = data
+    cfg = BMoEConfig(framework=framework, expert_kind="mlp", attack=attack,
+                     pow_difficulty=2, seed=seed)
+    sys_ = BMoESystem(cfg)
+    rng = np.random.default_rng(seed)
+    for _ in range(rounds):
+        idx = rng.integers(0, len(xtr), 256)
+        sys_.train_round(xtr[idx], ytr[idx])
+    return sys_
+
+
+ATK = AttackConfig(malicious_edges=(7, 8, 9), attack_prob=0.5,
+                   noise_std=5.0)
+
+
+def test_bmoe_robust_traditional_degrades(data):
+    """Paper Fig. 4c protocol: both frameworks trained in a trustworthy
+    environment, then attacked at inference — the frozen traditional gate
+    cannot detect manipulation; B-MoE's consensus filters it out."""
+    _, _, xte, yte = data
+    trad = _train("traditional", AttackConfig(), data)
+    bmoe = _train("bmoe", AttackConfig(), data)
+    strong = AttackConfig(malicious_edges=(7, 8, 9), attack_prob=1.0,
+                          noise_std=5.0)
+    acc_trad = trad.evaluate(xte, yte, attack=strong)
+    acc_bmoe = bmoe.evaluate(xte, yte, attack=strong)
+    assert acc_bmoe > acc_trad + 0.1, (acc_bmoe, acc_trad)
+    # B-MoE under attack ~= clean accuracy
+    acc_clean = bmoe.evaluate(xte, yte, attack=AttackConfig())
+    assert abs(acc_bmoe - acc_clean) < 0.02
+
+
+def test_gate_deactivates_poisoned_experts_in_training(data):
+    """Fig. 2: under training-time attack the traditional gate's
+    activation ratio for malicious experts collapses."""
+    trad = _train("traditional", ATK, data, rounds=40)
+    ratio = trad.activation_ratio
+    assert ratio[list(ATK.malicious_edges)].mean() \
+        < 0.5 * ratio[:7].mean()
+
+
+def test_bmoe_keeps_workload_balanced(data):
+    bmoe = _train("bmoe", ATK, data, rounds=40)
+    ratio = bmoe.activation_ratio
+    # no expert starved: malicious experts stay within 2.5x of the others
+    assert ratio[list(ATK.malicious_edges)].mean() \
+        > ratio[:7].mean() / 2.5
+
+
+def test_ledger_records_every_training_round(data):
+    bmoe = _train("bmoe", ATK, data, rounds=10)
+    assert len(bmoe.ledger.blocks) == 11  # genesis + 10 rounds
+    assert bmoe.ledger.verify_chain()
+    rounds = [b.payload["round"] for b in bmoe.ledger.blocks[1:]]
+    assert rounds == list(range(10))
+    assert all("expert_hash" in b.payload for b in bmoe.ledger.blocks[1:])
+
+
+def test_param_poisoning_rejected_by_hash_vote(data):
+    atk = AttackConfig(malicious_edges=(7, 8, 9), attack_prob=1.0,
+                       noise_std=5.0, poison_params=True)
+    bmoe = _train("bmoe", atk, data, rounds=5)
+    for b in bmoe.ledger.blocks[1:]:
+        assert b.payload["expert_hash_accepted"]
+        assert b.payload["expert_hash_support"] == 7  # honest majority
+        assert "chain_misled" not in b.payload
+
+
+def test_majority_poisoning_misleads_chain(data):
+    """>50% malicious: the chain accepts the poisoned hash (paper
+    §IV-B threshold)."""
+    atk = AttackConfig(malicious_edges=(0, 1, 2, 3, 4, 5),
+                       attack_prob=1.0, noise_std=5.0, poison_params=True,
+                       colluding=True)
+    bmoe = _train("bmoe", atk, data, rounds=3)
+    assert any(b.payload.get("chain_misled") for b in bmoe.ledger.blocks[1:])
+
+
+def test_inference_attack_sweep_threshold(data):
+    """Fig. 4c shape: B-MoE flat below 50% malicious, collapses above."""
+    _, _, xte, yte = data
+    bmoe = _train("bmoe", AttackConfig(), data, rounds=30)
+    accs = {}
+    for m in (0, 3, 6):
+        atk = AttackConfig(malicious_edges=tuple(range(10 - m, 10)),
+                           attack_prob=1.0, noise_std=5.0)
+        accs[m] = bmoe.evaluate(xte[:300], yte[:300], attack=atk)
+    assert abs(accs[3] - accs[0]) < 0.03     # robust below threshold
+    assert accs[6] < accs[0] - 0.2           # collapse above threshold
+
+
+def test_latency_report_shows_bmoe_overhead(data):
+    trad = _train("traditional", ATK, data, rounds=5)
+    bmoe = _train("bmoe", ATK, data, rounds=5)
+    lt = trad.latency_report(expert_bytes=850_000, result_bytes=40_000,
+                             rounds=5)
+    lb = bmoe.latency_report(expert_bytes=850_000, result_bytes=40_000,
+                             rounds=5)
+    assert lb["total_s"] > lt["total_s"]     # security costs latency
+    assert lb["consensus_s"] >= 0 and lb["chain_s"] > 0

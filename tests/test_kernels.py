@@ -1,0 +1,190 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs the pure-jnp
+oracle in kernels/ref.py, swept over shapes and dtypes (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gemm import moe_gemm
+from repro.kernels.redundancy_vote import pairwise_agreement
+from repro.kernels.ssd_scan import ssd_scan
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+# ------------------------------------------------------------ moe_gemm
+@settings(**SETTINGS)
+@given(E=st.sampled_from([1, 3, 4]),
+       C=st.sampled_from([8, 40, 128, 200]),
+       d=st.sampled_from([32, 96, 128]),
+       f=st.sampled_from([16, 128, 192]),
+       dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+def test_moe_gemm_matches_ref(E, C, d, f, dtype):
+    key = jax.random.PRNGKey(E * 1000 + C)
+    buf = jax.random.normal(key, (E, C, d), dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (E, d, f), dtype)
+    got = moe_gemm(buf, w, interpret=True)
+    want = ref.moe_gemm_ref(buf, w)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 8)
+
+
+def test_moe_gemm_nondivisible_blocks():
+    buf = jax.random.normal(jax.random.PRNGKey(0), (2, 100, 50))
+    w = jax.random.normal(jax.random.PRNGKey(1), (2, 50, 70))
+    got = moe_gemm(buf, w, block_c=32, block_d=32, block_f=32,
+                   interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.moe_gemm_ref(buf, w)),
+                               rtol=1e-5, atol=1e-4)
+
+
+# ----------------------------------------------------- redundancy_vote
+@settings(**SETTINGS)
+@given(E=st.sampled_from([1, 4, 10]),
+       M=st.sampled_from([3, 5, 10]),
+       T=st.sampled_from([7, 64, 1500]),
+       n_bad=st.integers(0, 2))
+def test_pairwise_agreement_matches_ref(E, M, T, n_bad):
+    key = jax.random.PRNGKey(E + M + T)
+    pub = jnp.broadcast_to(jax.random.normal(key, (E, 1, T)),
+                           (E, M, T)).copy()
+    if n_bad:
+        noise = jax.random.normal(jax.random.fold_in(key, 2),
+                                  (E, n_bad, T))
+        pub = pub.at[:, :n_bad].add(noise)
+    got = pairwise_agreement(pub, interpret=True, tile=64)
+    want_unpadded = ref.pairwise_agreement_ref(pub)
+    pad = (-T) % min(64, T)   # kernel clamps tile to T
+    # padded zeros agree for every pair: constant offset
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(want_unpadded) + pad)
+
+
+@pytest.mark.parametrize("M,n_bad", [(10, 3), (10, 4), (5, 2), (3, 1)])
+def test_vote_rejects_minority(M, n_bad):
+    """Colluding minority (paper §IV-B scenario 2, ratio < 50%) never
+    flips the vote, in both ref and kernel backends."""
+    key = jax.random.PRNGKey(0)
+    honest = jax.random.normal(key, (4, 16, 8))
+    pub = jnp.broadcast_to(honest[:, None], (4, M, 16, 8)).copy()
+    delta = jax.random.normal(jax.random.fold_in(key, 1), (4, 1, 16, 8))
+    pub = pub.at[:, :n_bad].add(jnp.broadcast_to(delta, (4, n_bad, 16, 8)))
+    for backend in ("ref", "interpret"):
+        from repro.kernels import ops
+        trusted, support = ops.redundancy_vote(pub, backend=backend)
+        np.testing.assert_allclose(np.asarray(trusted), np.asarray(honest),
+                                   rtol=0, atol=0)
+        assert int(support.min()) == M - n_bad
+
+
+def test_vote_majority_collusion_wins():
+    """> 50% colluding attackers mislead the chain (paper's threshold)."""
+    key = jax.random.PRNGKey(0)
+    honest = jax.random.normal(key, (2, 8, 4))
+    pub = jnp.broadcast_to(honest[:, None], (2, 10, 8, 4)).copy()
+    delta = jax.random.normal(jax.random.fold_in(key, 1), (2, 1, 8, 4))
+    pub = pub.at[:, :6].add(jnp.broadcast_to(delta, (2, 6, 8, 4)))
+    from repro.kernels import ops
+    trusted, support = ops.redundancy_vote(pub)
+    assert not np.allclose(np.asarray(trusted), np.asarray(honest))
+    assert int(support.min()) == 6
+
+
+# ------------------------------------------------------ flash attention
+@settings(**SETTINGS)
+@given(B=st.sampled_from([1, 2]),
+       S=st.sampled_from([64, 128, 256]),
+       H=st.sampled_from([2, 4]),
+       KH=st.sampled_from([1, 2]),
+       D=st.sampled_from([32, 64]),
+       causal=st.booleans(),
+       window=st.sampled_from([0, 32]))
+def test_flash_attention_matches_ref(B, S, H, KH, D, causal, window):
+    if H % KH:
+        KH = 1
+    key = jax.random.PRNGKey(S + H)
+    q = jax.random.normal(key, (B, H, S, D), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, KH, S, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, KH, S, D))
+    got = flash_attention(q, k, v, causal=causal, window=window, bq=64,
+                          bk=64, interpret=True)
+    want = ref.attention_ref(jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2),
+                             jnp.moveaxis(v, 1, 2), causal=causal,
+                             window=window)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jnp.moveaxis(want, 2, 1)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_softcap():
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(key, (1, 2, 128, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 128, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 128, 32))
+    got = flash_attention(q, k, v, causal=True, softcap=20.0, bq=64, bk=64,
+                          interpret=True)
+    want = ref.attention_ref(jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2),
+                             jnp.moveaxis(v, 1, 2), causal=True,
+                             softcap=20.0)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jnp.moveaxis(want, 2, 1)),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------ ssd scan
+@settings(**SETTINGS)
+@given(B=st.sampled_from([1, 2]),
+       S=st.sampled_from([64, 256]),
+       H=st.sampled_from([1, 3]),
+       P=st.sampled_from([16, 32]),
+       N=st.sampled_from([8, 16]),
+       chunk=st.sampled_from([32, 64]))
+def test_ssd_scan_matches_ref(B, S, H, P, N, chunk):
+    key = jax.random.PRNGKey(S + P)
+    x = jax.random.normal(key, (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (B, S, H))) * 0.1
+    A = -jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (H,))) - 0.1
+    Bm = jax.random.normal(jax.random.fold_in(key, 3), (B, S, N)) * 0.5
+    Cm = jax.random.normal(jax.random.fold_in(key, 4), (B, S, N)) * 0.5
+    got = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    want, _ = ref.ssd_scan_ref(x, dt, A, Bm, Cm, state0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ops_dispatch_backends():
+    """ops.* must agree across ref and interpret backends."""
+    from repro.kernels import ops
+    key = jax.random.PRNGKey(0)
+    buf = jax.random.normal(key, (2, 16, 32))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (2, 32, 24))
+    np.testing.assert_allclose(
+        np.asarray(ops.moe_gemm(buf, w, backend="ref")),
+        np.asarray(ops.moe_gemm(buf, w, backend="interpret")),
+        rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------ rglru scan
+@settings(**SETTINGS)
+@given(B=st.sampled_from([1, 2]), S=st.sampled_from([64, 128, 256]),
+       C=st.sampled_from([128, 256]),
+       seq_block=st.sampled_from([32, 64]))
+def test_rglru_scan_matches_ref(B, S, C, seq_block):
+    from repro.kernels.rglru_scan import rglru_scan_pallas
+    from repro.models.rglru import rglru_scan
+    key = jax.random.PRNGKey(S + C)
+    a = jax.nn.sigmoid(jax.random.normal(key, (B, S, C)))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (B, S, C))
+    got = rglru_scan_pallas(a, b, seq_block=seq_block, chan_block=128,
+                            interpret=True)
+    want = rglru_scan(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,57 @@
+"""Property tests (hypothesis) for the MoE router invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.moe import capacity_for, route
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(B=st.integers(1, 3), S=st.sampled_from([4, 16, 33]),
+       E=st.sampled_from([4, 8, 10]), k=st.integers(1, 3),
+       cap=st.sampled_from([1, 4, 64]), seed=st.integers(0, 3))
+def test_route_invariants(B, S, E, k, cap, seed):
+    k = min(k, E)
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (B, S, E))
+    weights, expert_id, position, keep, aux = route(logits, k, cap)
+    w, eid = np.asarray(weights), np.asarray(expert_id)
+    pos, kp = np.asarray(position), np.asarray(keep)
+
+    # weights: renormalized over selected experts, nonnegative
+    np.testing.assert_allclose(w.sum(-1), 1.0, rtol=1e-5)
+    assert (w >= 0).all()
+    # expert ids valid; top-k unique per token
+    assert (eid >= 0).all() and (eid < E).all()
+    for b in range(B):
+        for s in range(S):
+            assert len(set(eid[b, s])) == k
+    # kept slots fit capacity; (expert, position) unique per row
+    assert (pos[kp] < cap).all()
+    for b in range(B):
+        pairs = [(int(e), int(p)) for e, p, kk in
+                 zip(eid[b].ravel(), pos[b].ravel(), kp[b].ravel()) if kk]
+        assert len(pairs) == len(set(pairs))
+    # aux is a finite positive scalar near 1 for balanced random logits
+    assert np.isfinite(float(aux)) and float(aux) > 0
+
+
+@settings(**SETTINGS)
+@given(E=st.sampled_from([8, 16]), real=st.integers(2, 7),
+       seed=st.integers(0, 3))
+def test_route_never_selects_padded_expert(E, real, seed):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (2, 8, E)) * 3
+    _, expert_id, _, _, _ = route(logits, 2, 8, num_real=real)
+    assert int(np.asarray(expert_id).max()) < real
+
+
+def test_capacity_for_bounds():
+    from repro.configs import get_config
+    cfg = get_config("qwen2-moe-a2.7b")
+    c = capacity_for(cfg, 4096)
+    assert c % 8 == 0
+    assert c >= 4096 * cfg.num_experts_per_tok // cfg.num_experts
+    # degenerate: single token still gets a slot
+    assert capacity_for(cfg, 1) >= 1

@@ -1,0 +1,100 @@
+"""Paper §VI extensions: reputation-aided consensus, workload balance,
+incentive/exclusion mechanics."""
+import numpy as np
+import pytest
+
+from repro.core.attacks import AttackConfig
+from repro.core.bmoe import BMoEConfig, BMoESystem
+from repro.core.reputation import ReputationConfig, ReputationLedger, WorkloadBalancer
+from repro.data.synthetic import FMNIST, make_image_dataset
+
+
+@pytest.fixture(scope="module")
+def data():
+    xtr, ytr, xte, yte = make_image_dataset(FMNIST, n_train=2000, n_test=400,
+                                            seed=0)
+    return xtr.reshape(len(xtr), -1), ytr, xte.reshape(len(xte), -1), yte
+
+
+def test_reputation_ledger_dynamics():
+    led = ReputationLedger(4, ReputationConfig(init=0.5, gain=0.1,
+                                               slash=0.3))
+    # edges 0-2 honest, edge 3 always rejected
+    flags = np.array([[1, 1, 1, 0]] * 5)     # (E=5, M=4)
+    for _ in range(3):
+        led.update_from_flags(flags)
+    assert led.rep[0] > 0.5 and led.rep[3] < 0.5
+    assert led.rewards[3] < 0 < led.rewards[0]
+    for _ in range(5):
+        led.update_from_flags(flags)
+    assert led.excluded[3] and not led.excluded[0]
+    assert 3 not in led.active_edges()
+
+
+def test_reputation_scales_mining_power():
+    led = ReputationLedger(3, ReputationConfig(difficulty_scale=4))
+    led.rep = np.array([1.0, 0.5, 0.0])
+    p = led.effective_power()
+    assert p[0] > p[1] > p[2]
+    assert p[0] / p[2] == pytest.approx(16.0)  # 2**4
+
+
+def test_workload_balancer_pushes_toward_uniform():
+    bal = WorkloadBalancer(4, eta=1.0)
+    bal.update(np.array([100.0, 0.0, 0.0, 0.0]))
+    assert bal.bias[0] < 0 and (bal.bias[1:] > 0).all()
+
+
+def test_reputation_excludes_persistent_attackers(data):
+    """Persistent attackers get slashed below the exclusion threshold and
+    barred from the electorate — afterwards even a vote tie cannot elect
+    them (paper §VI-D damage bounding)."""
+    xtr, ytr, _, _ = data
+    atk = AttackConfig(malicious_edges=(7, 8, 9), attack_prob=1.0,
+                       noise_std=5.0)
+    cfg = BMoEConfig(framework="bmoe", attack=atk, pow_difficulty=2,
+                     reputation=ReputationConfig(init=0.5, gain=0.02,
+                                                 slash=0.15,
+                                                 exclusion_threshold=0.2))
+    s = BMoESystem(cfg)
+    rng = np.random.default_rng(0)
+    for _ in range(8):
+        idx = rng.integers(0, len(xtr), 128)
+        s.train_round(xtr[idx], ytr[idx])
+    rep = s.reputation.rep
+    assert rep[7:].max() < rep[:7].min()
+    assert s.reputation.excluded[7:].all()
+    assert not s.reputation.excluded[:7].any()
+
+
+def test_workload_balance_in_system(data):
+    """Under attacked training the gate starves malicious experts; the
+    §VI-C bias controller pulls activation back toward uniform."""
+    xtr, ytr, _, _ = data
+    atk = AttackConfig(malicious_edges=(7, 8, 9), attack_prob=0.5,
+                       noise_std=5.0)
+
+    def run(balance):
+        cfg = BMoEConfig(framework="traditional", attack=atk,
+                         pow_difficulty=2, workload_balance=balance)
+        s = BMoESystem(cfg)
+        rng = np.random.default_rng(0)
+        for _ in range(40):
+            idx = rng.integers(0, len(xtr), 128)
+            s.train_round(xtr[idx], ytr[idx])
+        r = s.activation_ratio
+        return float(np.std(r))
+
+    assert run(True) < run(False)
+
+
+def test_hybrid_consensus_reputation_mining(data):
+    """Reputation-weighted PoW: honest (high-rep) nodes win most blocks."""
+    from repro.core.consensus import ProofOfWork
+    led = ReputationLedger(4, ReputationConfig(difficulty_scale=5))
+    led.rep = np.array([0.9, 0.9, 0.1, 0.1])
+    pow_ = ProofOfWork(4, difficulty_bits=4,
+                       mining_power=led.effective_power(), seed=0)
+    miners = [pow_.mine(i, "0" * 64, {}).miner for i in range(30)]
+    honest = sum(1 for m in miners if m in (0, 1))
+    assert honest >= 24
