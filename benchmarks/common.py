@@ -35,7 +35,7 @@ def dataset(kind: str):
 
 
 def make_system(framework: str, kind: str, attack: AttackConfig,
-                seed: int = 0) -> BMoESystem:
+                seed: int = 0, **overrides) -> BMoESystem:
     cfg = BMoEConfig(
         framework=framework,
         expert_kind="mlp" if kind == "fmnist" else "cnn",
@@ -45,6 +45,7 @@ def make_system(framework: str, kind: str, attack: AttackConfig,
         pow_difficulty=6,
         seed=seed,
         lr=0.01 if kind == "fmnist" else 0.1,   # paper §V-A(4)
+        **overrides,
     )
     return BMoESystem(cfg)
 

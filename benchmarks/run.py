@@ -13,7 +13,7 @@ import time
 def main() -> None:
     from benchmarks import (fig2_activation_ratio, fig4a_training,
                             fig4b_latency, fig4c_inference, kernel_bench,
-                            roofline_table, sec6_extensions)
+                            roofline_table, sec6_extensions, trust_overhead)
     suites = {
         "kernels": lambda: kernel_bench.main(),
         "fig2": lambda: fig2_activation_ratio.main("fmnist"),
@@ -24,6 +24,7 @@ def main() -> None:
                           + fig4c_inference.main("cifar")),
         "roofline": lambda: roofline_table.main(),
         "sec6": lambda: sec6_extensions.main("fmnist"),
+        "trust": lambda: trust_overhead.main("fmnist"),
     }
     selected = sys.argv[1:] or list(suites)
     print("name,us_per_call,derived")

@@ -1,6 +1,8 @@
 """Serving example: batched greedy generation through the serving engine,
-plus the LM-scale trusted-MoE consensus demonstrated on a multi-device
-mesh (subprocess with virtual devices, since this container has 1 CPU).
+a verified (commit-challenge-audit) serving session that finalizes only
+audited outputs, plus the LM-scale trusted-MoE consensus demonstrated on
+a multi-device mesh (subprocess with virtual devices, since this
+container has 1 CPU).
 
 Run:  PYTHONPATH=src python examples/trusted_serving.py
 """
@@ -16,6 +18,7 @@ from repro.configs import get_config
 from repro.data.synthetic import serving_requests
 from repro.serve.engine import ServingEngine
 from repro.train.loop import init_model
+from repro.trust.protocol import TrustConfig
 
 # ------------------------------------------------ 1. serving engine
 print("=== batched serving (smollm-360m reduced config) ===")
@@ -26,11 +29,41 @@ requests = list(serving_requests(cfg.vocab_size, 10, max_prompt=24,
                                  max_new=8, seed=0))
 engine.submit(requests)
 done = engine.run()
-for rid in sorted(done):
+for rid in done:
     print(f"  request {rid}: generated {len(done[rid])} tokens "
           f"{done[rid][:6]}...")
 
-# -------------------------------- 2. trusted vote on a replica mesh
+# ------------------------- 2. verified serving (optimistic trust layer)
+print("\n=== verified serving session (commit-challenge-audit) ===")
+trust = TrustConfig(audit_rate=0.5, num_verifiers=2, challenge_window=6)
+veng = ServingEngine(cfg, params, batch_slots=4, cache_len=96, trust=trust)
+veng.submit(requests)
+vdone = veng.run()
+print(f"  finalized {len(vdone)}/{len(requests)} requests "
+      f"(pending windows: {len(veng.pending_finalization)})")
+assert {rid: toks for rid, toks in vdone.items()} == dict(done), \
+    "verified session must serve the same tokens, just later"
+commits = [e for e in veng.session_log if e["event"] == "commit"]
+finals = [e for e in veng.session_log if e["event"] == "finalize"]
+print(f"  session log: {len(commits)} commitments, {len(finals)} finalized")
+print(f"  e.g. request {commits[0]['request']}: root "
+      f"{commits[0]['root']}..., committed at tick {commits[0]['tick']}, "
+      f"finalized at tick {finals[0]['tick']}")
+# the audit pass: sampled per-tick leaves re-checked against each root
+reports = veng.audit_all()
+print(f"  audits: {len(reports)} passes, "
+      f"{sum(len(r['sampled']) for r in reports)} leaves sampled, "
+      f"revoked: {sum(r['revoked'] for r in reports)}")
+# a tampered stream is caught and never finalizes
+rid = requests[0]["id"]
+rec = veng.records[rid]
+rec.tokens = [t ^ 1 for t in rec.tokens]   # executor alters the stream
+tam = [veng.audit_session(rid, v) for v in range(trust.num_verifiers)]
+caught = any(t["revoked"] for t in tam)
+print(f"  tampered request {rid}: revoked by audit -> {caught}; "
+      f"still finalized -> {rid in veng.completed}")
+
+# -------------------------------- 3. trusted vote on a replica mesh
 print("\n=== B-MoE consensus at LM scale (r=4 replicas, 1 malicious) ===")
 code = """
 import jax, jax.numpy as jnp, numpy as np

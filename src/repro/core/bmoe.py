@@ -2,7 +2,7 @@
 layer + storage layer, running the full Step 1-6 workflow for training
 and the Step 1-3 (+6) workflow for inference.
 
-Two frameworks are implemented behind one API:
+Three frameworks are implemented behind one API:
 
 - ``framework="traditional"``: the paper's baseline — edge i employs
   expert i; no redundancy, no consensus; malicious edges corrupt their
@@ -12,10 +12,21 @@ Two frameworks are implemented behind one API:
   per-expert results, aggregates the trusted ones, and records the round
   in a PoW block; updated experts are hash-voted and stored by CID
   (Steps 4-5) during training.
+- ``framework="optimistic"``: the commit-challenge-audit protocol from
+  ``repro.trust`` — one rotating executor edge computes, commits a
+  Merkle root over its per-expert output chunks on-chain, and the round
+  is accepted optimistically; a verifier pool spot-checks sampled leaves
+  (recompute against the stored expert by CID), confirmed fraud proofs
+  slash the executor's stake, feed the reputation ledger, escalate the
+  round to the full redundancy vote (the dispute court), and roll the
+  round's parameter update back.  Expected verification recompute drops
+  from O(M) to O(audit_rate) per round while keeping the same trust
+  guarantee up to 1-(1-audit_rate)^k detection.
 
 The numerics (expert compute, manipulation, majority vote, SGD) run as
-one jitted step; the ledger/PoW/storage bookkeeping runs per round in
-Python, mirroring the paper's on-chain/off-chain split.
+one jitted step; the ledger/PoW/storage bookkeeping — and, for the
+optimistic framework, the commit/audit/slash/rollback machinery — runs
+per round in Python, mirroring the paper's on-chain/off-chain split.
 """
 from __future__ import annotations
 
@@ -33,9 +44,11 @@ from repro.core.attacks import AttackConfig, round_attack_mask, poison_tree
 from repro.core.consensus import ProofOfWork, majority_tree_vote
 from repro.core.ledger import Block, Ledger, digest_array, digest_tree
 from repro.core.reputation import ReputationConfig, ReputationLedger, WorkloadBalancer
-from repro.core.storage import StorageNetwork
+from repro.core.storage import StorageNetwork, serialize_tree
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.trust.commitments import chunk_bounds
+from repro.trust.protocol import OptimisticProtocol, TrustConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,8 +61,8 @@ class BMoEConfig:
     in_ch: int = 1
     num_classes: int = 10
     lr: float = 0.01
-    framework: str = "bmoe"         # bmoe | traditional
-    attack: AttackConfig = AttackConfig()
+    framework: str = "bmoe"         # bmoe | traditional | optimistic
+    attack: AttackConfig = dataclasses.field(default_factory=AttackConfig)
     pow_difficulty: int = 8
     num_chain_nodes: int = 8
     store_every: int = 50           # expert->storage cadence (rounds)
@@ -59,6 +72,8 @@ class BMoEConfig:
     reputation: Optional[ReputationConfig] = None       # §VI-B/D
     workload_balance: bool = False                      # §VI-C
     balance_eta: float = 0.5
+    # optimistic framework knobs (see repro.trust)
+    trust: Optional[TrustConfig] = None
 
 
 class BMoESystem:
@@ -81,15 +96,38 @@ class BMoESystem:
                                difficulty_bits=cfg.pow_difficulty,
                                seed=cfg.seed)
         self.round = 0
-        self.reputation = (ReputationLedger(cfg.num_edges, cfg.reputation)
-                           if cfg.reputation else None)
+        if cfg.framework == "optimistic" and cfg.reputation is None:
+            # exclusion of slashed executors needs a reputation ledger
+            self.reputation = ReputationLedger(cfg.num_edges,
+                                               ReputationConfig())
+        else:
+            self.reputation = (ReputationLedger(cfg.num_edges, cfg.reputation)
+                               if cfg.reputation else None)
         self.balancer = (WorkloadBalancer(cfg.num_experts, cfg.balance_eta)
                          if cfg.workload_balance else None)
         self.activation_counts = np.zeros(cfg.num_experts)
         self.activation_total = 0
         self._expert_cids: List[str] = []
+        # audit evidence CIDs per optimistic round, pruned from storage
+        # once the round's challenge window closes (data-availability)
+        self._audit_cids: Dict[int, List[str]] = {}
         self._timers: Dict[str, float] = {"compute": 0.0, "consensus": 0.0,
                                           "chain": 0.0}
+        # verification-compute ledger, in units of (expert evaluations x
+        # samples): base = the one canonical execution, verify = recompute
+        # done purely to check it (redundant copies / audits), escalate =
+        # dispute-court full votes.  The jitted simulation broadcasts
+        # instead of physically recomputing, so cost is counted, not timed.
+        self.verify_stats = {"base_evals": 0.0, "verify_evals": 0.0,
+                             "escalate_evals": 0.0, "rounds": 0}
+        self.trust_cfg: Optional[TrustConfig] = None
+        self.protocol: Optional[OptimisticProtocol] = None
+        if cfg.framework == "optimistic":
+            self.trust_cfg = cfg.trust or TrustConfig(seed=cfg.seed)
+            self.protocol = OptimisticProtocol(self.trust_cfg, cfg.num_edges,
+                                               self.reputation)
+            self._apply_one = (ex.mlp_expert_apply if cfg.expert_kind == "mlp"
+                               else ex.cnn_expert_apply)
         self._train_step = jax.jit(functools.partial(
             _train_step, cfg=cfg, apply_all=self._apply_all))
         self._infer_step = jax.jit(functools.partial(
@@ -103,26 +141,40 @@ class BMoESystem:
         rkey = jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 17),
                                   self.round)
         mask_e = round_attack_mask(atk, cfg.num_edges, rkey)
+        executor = (self.protocol.pick_executor(self.round)
+                    if cfg.framework == "optimistic" else 0)
+        prev = (self.gate, self.experts)
 
         gate_bias, active = self._controls()
         t0 = time.perf_counter()
         (self.gate, self.experts, metrics) = self._train_step(
             self.gate, self.experts, x, y, mask_e,
             jax.random.fold_in(rkey, 1), atk.noise_std,
-            jnp.asarray(atk.colluding), gate_bias, active)
+            jnp.asarray(atk.colluding), gate_bias, active,
+            jnp.int32(executor))
         metrics = jax.tree_util.tree_map(np.asarray, metrics)
         self._timers["compute"] += time.perf_counter() - t0
-        self._update_controllers(metrics)
 
-        self.activation_counts += metrics["activation"]
-        self.activation_total += int(x.shape[0]) * cfg.top_k
-
+        batch = int(x.shape[0])
         payload = {
             "round": self.round, "kind": "train",
             "task": digest_array(np.asarray(x)[:8]),
             "loss": float(metrics["loss"]),
         }
+        # cost ledger in dense-execution units (one unit = one expert
+        # evaluated on one sample; the sim evaluates the full N-expert
+        # bank, and the optimistic commitment covers exactly that), so
+        # base/verify/escalate are all measured with the same yardstick
+        self.verify_stats["rounds"] += 1
+        if cfg.framework == "traditional":
+            self.verify_stats["base_evals"] += cfg.top_k * batch  # routed
+        else:
+            self.verify_stats["base_evals"] += cfg.num_experts * batch
         if cfg.framework == "bmoe":
+            # the redundancy mechanism IS the verification: M-1 extra
+            # copies of the same execution
+            self.verify_stats["verify_evals"] += \
+                (cfg.num_edges - 1) * cfg.num_experts * batch
             # Step 4-5: edges upload updated experts; hash vote + storage.
             t0 = time.perf_counter()
             payload["trusted_supports"] = metrics["support"].tolist()
@@ -132,20 +184,46 @@ class BMoESystem:
             t0 = time.perf_counter()
             self._mine(payload)
             self._timers["chain"] += time.perf_counter() - t0
+        elif cfg.framework == "optimistic":
+            # commit -> optimistic accept -> audit -> maybe rollback
+            t0 = time.perf_counter()
+            metrics = self._optimistic_round(
+                x, y, atk, mask_e, rkey, executor, prev, metrics, payload,
+                gate_bias, active)
+            self._timers["consensus"] += time.perf_counter() - t0
+            payload["loss"] = float(metrics["loss"])
+            t0 = time.perf_counter()
+            self._mine(payload)
+            self._timers["chain"] += time.perf_counter() - t0
+        self._update_controllers(metrics)
+        self.activation_counts += metrics["activation"]
+        self.activation_total += batch * cfg.top_k
         self.round += 1
         return metrics
 
     def infer(self, x, *, attack: Optional[AttackConfig] = None):
-        """Steps 1-3 (+6): forward only, no updates (paper: 4-5 skipped)."""
+        """Steps 1-3 (+6): forward only, no updates (paper: 4-5 skipped).
+
+        Under ``framework="optimistic"`` the returned logits are the
+        *finalized* view: committed results are only consumed after their
+        challenge window, and a detected-fraud round is replaced by the
+        court's recompute, so the post-finalization output is the honest
+        one (full-tensor corruption is caught w.p. 1-(1-audit_rate)^k
+        ~= 1).  The per-tick commit/finalize protocol for streaming
+        inference lives in ``ServingEngine`` verified sessions.
+        """
         cfg = self.cfg
         atk = attack if attack is not None else cfg.attack
         rkey = jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 91),
                                   self.round + 1_000_000)
         mask_e = round_attack_mask(atk, cfg.num_edges, rkey)
+        if cfg.framework == "optimistic":
+            mask_e = jnp.zeros_like(mask_e)
         gate_bias, active = self._controls()
         logits, activation, support = self._infer_step(
             self.gate, self.experts, x, mask_e, jax.random.fold_in(rkey, 1),
-            atk.noise_std, jnp.asarray(atk.colluding), gate_bias, active)
+            atk.noise_std, jnp.asarray(atk.colluding), gate_bias, active,
+            jnp.int32(0))
         return np.asarray(logits), np.asarray(activation), np.asarray(support)
 
     def evaluate(self, x, y, *, attack: Optional[AttackConfig] = None,
@@ -170,7 +248,10 @@ class BMoESystem:
     def _update_controllers(self, metrics):
         if self.balancer is not None:
             self.balancer.update(metrics["activation"])
-        if self.reputation is not None and "flags" in metrics:
+        # optimistic rounds feed reputation through confirmed fraud proofs
+        # (slashing), not per-round agreement flags
+        if (self.reputation is not None and "flags" in metrics
+                and self.cfg.framework != "optimistic"):
             self.reputation.update_from_flags(metrics["flags"])
 
     @property
@@ -214,6 +295,130 @@ class BMoESystem:
                               payload)
         self.ledger.append(block)
 
+    # ------------------------------------------- optimistic verification
+    def _eager_outputs(self, experts, xin, bounds):
+        """The executor's commitment-building pass: every expert's output
+        computed chunk-by-chunk through the same per-expert apply the
+        auditors use, so honest leaves recompute bit-identically."""
+        cfg = self.cfg
+        parts = []
+        for e in range(cfg.num_experts):
+            p_e = jax.tree_util.tree_map(lambda a: a[e], experts)
+            chunks = [np.asarray(self._apply_one(
+                p_e, jnp.asarray(xin[bounds[c]:bounds[c + 1]])))
+                for c in range(len(bounds) - 1)]
+            parts.append(np.concatenate(chunks, axis=0))
+        return np.stack(parts)
+
+    def _make_recompute(self, experts, xin):
+        """Auditor-side recompute: fetch the sampled expert from the
+        storage layer by CID (content-addressed, so a tampered replica is
+        self-evident) and recompute the audited chunk on the published
+        task.  Single-process caveat: the executor and auditor share
+        memory here, so the put/get round-trip exercises the mechanism
+        (replication, CID verification), not an adversarial network.
+        Evidence blobs live only while the round's challenge window is
+        open — they are pruned from storage once the round finalizes or
+        a court verdict resolves it (the compact fraud proofs remain in
+        the round state)."""
+        cache: Dict[int, object] = {}
+        cids = self._audit_cids.setdefault(self.round, [])
+
+        def recompute(e: int, sl: slice):
+            if e not in cache:
+                p_e = jax.tree_util.tree_map(lambda a: a[e], experts)
+                cid = self.storage.put(serialize_tree(p_e))
+                cache[e] = self.storage.get_tree(cid, p_e)
+                cids.append(cid)
+            return np.asarray(self._apply_one(cache[e], jnp.asarray(xin[sl])))
+
+        return recompute
+
+    def _optimistic_round(self, x, y, atk, mask_e, rkey, executor, prev,
+                          metrics, payload, gate_bias, active):
+        """Commit -> optimistic accept -> audit -> (challenge -> court ->
+        slash + rollback) for one training round.  Returns the round's
+        final metrics (the honest re-execution's, if rolled back)."""
+        from repro.trust.protocol import RoundPhase
+        cfg, tc = self.cfg, self.trust_cfg
+        xin = np.asarray(x if cfg.expert_kind == "cnn"
+                         else np.asarray(x).reshape(len(x), -1))
+        batch = xin.shape[0]
+        bounds = chunk_bounds(batch, tc.chunks_per_expert)
+        honest = self._eager_outputs(prev[1], xin, bounds)
+        attacked = bool(np.asarray(mask_e)[executor] > 0)
+        claimed = honest
+        if attacked:
+            rng = np.random.default_rng(cfg.seed * 7919 + self.round)
+            claimed = honest + atk.noise_std * rng.standard_normal(
+                honest.shape).astype(honest.dtype)
+        state = self.protocol.commit(self.round, executor, claimed,
+                                     task_digest=payload["task"])
+        payload["commit_root"] = state.commitment.root[:16]
+        payload["executor"] = executor
+
+        proofs = self.protocol.run_audits(
+            self.round, self._make_recompute(prev[1], xin))
+        audited = sum(r.recomputed_leaves for r in state.reports)
+        payload["audited_leaves"] = audited
+        self.verify_stats["verify_evals"] += \
+            audited * batch / max(state.commitment.chunks_per_expert, 1)
+
+        if proofs:
+            # dispute court: one full M-way redundancy vote settles the
+            # round (paper Step 3 as the fallback, not the common case)
+            pub = np.broadcast_to(
+                honest[:, None],
+                (cfg.num_experts, cfg.num_edges) + honest.shape[1:]).copy()
+            att = np.asarray(mask_e) > 0
+            if atk.colluding:
+                pub[:, att] = claimed[:, None]   # coalition backs the executor
+            else:
+                rng = np.random.default_rng(cfg.seed * 104729 + self.round)
+                for m in np.nonzero(att)[0]:
+                    pub[:, m] = honest + atk.noise_std * rng.standard_normal(
+                        honest.shape).astype(honest.dtype)
+            pub[:, executor] = claimed
+            verdict = self.protocol.court.escalate(
+                self.round, pub, executor, active=np.asarray(active))
+            state = self.protocol.resolve(self.round, verdict)
+            self.verify_stats["escalate_evals"] += \
+                cfg.num_edges * cfg.num_experts * batch
+            # the verdict settles the round: the bulky expert blobs can
+            # go (the compact fraud proofs stay in the round state)
+            for cid in self._audit_cids.pop(self.round, []):
+                self.storage.discard(cid)
+            payload["fraud_proofs"] = len(proofs)
+            payload["slashed"] = [ev.edge for ev in self.protocol.stakes.events
+                                  if ev.round_id == self.round]
+            if state.phase is RoundPhase.ROLLED_BACK:
+                # undo the poisoned update; re-run the round on the
+                # court's trusted result (honest recompute)
+                payload["rolled_back"] = True
+                self.gate, self.experts = prev
+                (self.gate, self.experts, metrics) = self._train_step(
+                    self.gate, self.experts, x, y, jnp.zeros_like(mask_e),
+                    jax.random.fold_in(rkey, 1), atk.noise_std,
+                    jnp.asarray(atk.colluding), gate_bias, active,
+                    jnp.int32(executor))
+                metrics = jax.tree_util.tree_map(np.asarray, metrics)
+                self.verify_stats["base_evals"] += cfg.num_experts * batch
+
+        # async challenge window: close windows that have expired (this
+        # round's audits already ran, so window=0 behaves correctly) and
+        # release the closed rounds' audit evidence from storage
+        finalized = self.protocol.advance(self.round)
+        if finalized:
+            payload["finalized_rounds"] = finalized
+            for rid in finalized:
+                for cid in self._audit_cids.pop(rid, []):
+                    self.storage.discard(cid)
+
+        metrics = dict(metrics)
+        metrics["rolled_back"] = np.float32(
+            1.0 if payload.get("rolled_back") else 0.0)
+        return metrics
+
     # ----------------------------------------------------- latency model
     def latency_report(self, expert_bytes: int, result_bytes: int,
                        rounds: int) -> Dict[str, float]:
@@ -225,6 +430,16 @@ class BMoESystem:
             # every edge downloads all K activated experts + uploads K results
             t_comm = (cfg.num_edges * cfg.top_k * expert_bytes
                       + cfg.num_edges * cfg.top_k * result_bytes) / bw
+        elif cfg.framework == "optimistic":
+            tc = self.trust_cfg
+            # executor: K expert downloads + K result uploads + 32B root;
+            # auditors: expected audit_rate of the N experts re-fetched
+            # plus the sampled result chunks (audit_rate is the pool-wide
+            # sampled fraction — already split across verifiers)
+            audit_bytes = tc.audit_rate * (
+                cfg.num_experts * expert_bytes + result_bytes)
+            t_comm = (cfg.top_k * expert_bytes + cfg.top_k * result_bytes
+                      + 32 + audit_bytes) / bw
         else:
             t_comm = cfg.top_k * result_bytes / bw
         r = max(rounds, 1)
@@ -238,6 +453,20 @@ class BMoESystem:
                        + self._timers["chain"] / r,
         }
 
+    def verification_report(self) -> Dict[str, float]:
+        """Per-round verification compute, in expert-evaluations x samples
+        (the simulation broadcasts copies instead of physically paying for
+        them, so redundancy/audit cost is counted, not wall-clocked)."""
+        r = max(self.verify_stats["rounds"], 1)
+        verify = self.verify_stats["verify_evals"]
+        escalate = self.verify_stats["escalate_evals"]
+        return {
+            "base_evals_per_round": self.verify_stats["base_evals"] / r,
+            "verify_evals_per_round": verify / r,
+            "escalate_evals_per_round": escalate / r,
+            "total_verification_per_round": (verify + escalate) / r,
+        }
+
 
 # ---------------------------------------------------------------- steps
 def _flatten_for_gate(x):
@@ -245,7 +474,7 @@ def _flatten_for_gate(x):
 
 
 def _moe_forward(gate, experts, x, mask_e, key, noise_std, colluding, cfg,
-                 apply_all, gate_bias=None, active=None):
+                 apply_all, gate_bias=None, active=None, executor=0):
     """Shared forward: returns (trusted_out (B,C), weights (B,N),
     activation (N,), support (N,), flags (N,M))."""
     B = x.shape[0]
@@ -256,7 +485,16 @@ def _moe_forward(gate, experts, x, mask_e, key, noise_std, colluding, cfg,
     weights, topi = ex.sparse_gate_weights(logits, cfg.top_k)
     outs = apply_all(experts, xin)                      # (N, B, C)
 
-    if cfg.framework == "traditional":
+    if cfg.framework == "optimistic":
+        # single-executor optimistic path: the round's result is whatever
+        # the rotating executor published (corrupted iff it attacks);
+        # verification happens off the jitted path (commit/audit/court)
+        exec_flag = mask_e[executor]
+        noise = jax.random.normal(key, outs.shape, outs.dtype)
+        trusted = outs + noise_std * noise * exec_flag
+        support = jnp.full((cfg.num_experts,), 1.0)
+        flags = jnp.ones((cfg.num_experts, cfg.num_edges), jnp.int32)
+    elif cfg.framework == "traditional":
         # edge i employs expert i: manipulation hits expert i directly
         from repro.core.attacks import manipulate_single
         mask_n = mask_e[:cfg.num_experts]
@@ -290,12 +528,12 @@ def _moe_forward(gate, experts, x, mask_e, key, noise_std, colluding, cfg,
 
 
 def _train_step(gate, experts, x, y, mask_e, key, noise_std, colluding,
-                gate_bias, active, *, cfg, apply_all):
+                gate_bias, active, executor, *, cfg, apply_all):
     def loss_fn(params):
         gate_p, experts_p = params
         out, w, activation, support, flags, _ = _moe_forward(
             gate_p, experts_p, x, mask_e, key, noise_std, colluding, cfg,
-            apply_all, gate_bias, active)
+            apply_all, gate_bias, active, executor)
         logp = jax.nn.log_softmax(out, axis=-1)
         loss = -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
         return loss, (activation, support, flags)
@@ -312,8 +550,8 @@ def _train_step(gate, experts, x, y, mask_e, key, noise_std, colluding,
 
 
 def _infer_step(gate, experts, x, mask_e, key, noise_std, colluding,
-                gate_bias, active, *, cfg, apply_all):
+                gate_bias, active, executor, *, cfg, apply_all):
     out, w, activation, support, flags, _ = _moe_forward(
         gate, experts, x, mask_e, key, noise_std, colluding, cfg, apply_all,
-        gate_bias, active)
+        gate_bias, active, executor)
     return out, activation, support

@@ -74,5 +74,11 @@ class StorageNetwork:
     def get_tree(self, cid: str, like) -> Any:
         return deserialize_tree(self.get(cid), like)
 
+    def discard(self, cid: str) -> None:
+        """Drop an object from every node — e.g. audit evidence whose
+        data-availability window (the challenge window) has closed."""
+        for node in self.nodes:
+            node.objects.pop(cid, None)
+
     def drop_node(self, node_id: int) -> None:
         self.nodes = [n for n in self.nodes if n.node_id != node_id]

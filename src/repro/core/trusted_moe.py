@@ -48,7 +48,7 @@ def _shard_map(f, mesh, in_specs, out_specs):
     try:
         return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, check_vma=False)
-    except TypeError:  # older jax spelling
+    except (TypeError, AttributeError):  # older jax spelling
         from jax.experimental.shard_map import shard_map
         return shard_map(f, mesh=mesh, in_specs=in_specs,
                          out_specs=out_specs, check_rep=False)
@@ -58,7 +58,11 @@ def _inject(y, attack: Optional[LMAttack]):
     if attack is None or not attack.malicious_replicas:
         return y
     rid = jax.lax.axis_index("replica")
-    mal = jnp.zeros((jax.lax.axis_size("replica"),), jnp.float32)
+    try:
+        n_rep = jax.lax.axis_size("replica")
+    except AttributeError:                 # older jax spelling
+        n_rep = jax.lax.psum(1, "replica")
+    mal = jnp.zeros((n_rep,), jnp.float32)
     mal = mal.at[jnp.array(attack.malicious_replicas, jnp.int32)].set(1.0)
     key = jax.random.PRNGKey(attack.seed)
     if not attack.colluding:

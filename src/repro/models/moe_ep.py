@@ -163,7 +163,7 @@ def moe_mlp_ep(params, x, cfg, mesh: Mesh, act_rules: dict, *,
     try:
         mapped = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
                                out_specs=out_specs, check_vma=False)
-    except TypeError:
+    except (TypeError, AttributeError):
         from jax.experimental.shard_map import shard_map
         mapped = shard_map(body, mesh=mesh, in_specs=in_specs,
                            out_specs=out_specs, check_rep=False)

@@ -6,12 +6,24 @@ are prefilled token-by-token through the decode path (CPU-scale; on TPU
 the prefill_step handles whole prompts), generation is greedy, and
 finished slots are refilled from the queue — the serving analogue of the
 paper's edge-layer inference (Steps 1-3, no updates).
+
+Verified sessions (``trust=TrustConfig(...)``): the optimistic
+commit-challenge-audit protocol from ``repro.trust`` applied to
+streaming inference.  Every engine tick appends a leaf digest of the
+slot's emitted token to the request's session commitment; when the
+request finishes, the Merkle root over its per-tick leaves is recorded
+in the session log and the request enters an asynchronous challenge
+window (measured in engine ticks).  ``completed`` exposes only
+*finalized* requests — window closed with no revocation — and auditors
+can spot-check sampled leaves against the committed root at any time
+(``audit_session``); a mismatch revokes the request instead of
+finalizing it.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Dict, Iterable, List
+from typing import Dict, Iterable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,13 +33,18 @@ from repro.models import transformer as tfm
 from repro.models.builder import materialize
 from repro.models.config import ModelConfig
 from repro.train.step import make_decode_step
+from repro.trust.audit import VerifierPool
+from repro.trust.commitments import MerkleTree, leaf_digest
+from repro.trust.protocol import ChallengeWindow, TrustConfig
 
 
 @dataclasses.dataclass
 class SlotState:
     request_id: int = -1
     pos: int = 0
-    remaining_prompt: List[int] = dataclasses.field(default_factory=list)
+    prompt: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int32))
+    cursor: int = 0                      # next prompt token to consume
     to_generate: int = 0
     generated: List[int] = dataclasses.field(default_factory=list)
 
@@ -35,10 +52,41 @@ class SlotState:
     def active(self) -> bool:
         return self.request_id >= 0
 
+    @property
+    def prefilling(self) -> bool:
+        return self.cursor < len(self.prompt)
+
+
+def _tick_leaf(request_id: int, tick: int, token: int) -> str:
+    """Leaf digest of one committed engine tick."""
+    return leaf_digest(np.array([request_id, tick, token], np.int64))
+
+
+@dataclasses.dataclass
+class SessionRecord:
+    """Per-request commitment stream: one leaf per generated token."""
+    request_id: int
+    leaves: List[str] = dataclasses.field(default_factory=list)
+    ticks: List[int] = dataclasses.field(default_factory=list)
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    root: str = ""
+    finalized: bool = False
+    revoked: bool = False
+
+    def append(self, tick: int, token: int) -> None:
+        self.leaves.append(_tick_leaf(self.request_id, tick, token))
+        self.ticks.append(tick)
+        self.tokens.append(token)
+
+    def seal(self) -> str:
+        self.root = MerkleTree(self.leaves).root
+        return self.root
+
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
-                 cache_len: int = 256, mesh=None):
+                 cache_len: int = 256, mesh=None,
+                 trust: Optional[TrustConfig] = None):
         if cfg.is_encoder_decoder:
             raise NotImplementedError("engine drives decoder-only archs")
         self.cfg = cfg
@@ -51,11 +99,51 @@ class ServingEngine:
         self._decode = jax.jit(make_decode_step(cfg, mesh))
         self.slots = [SlotState() for _ in range(batch_slots)]
         self.queue: deque = deque()
-        self.completed: Dict[int, List[int]] = {}
+        self.tick = 0
+        self._submit_order: List[int] = []
+        self._done: Dict[int, List[int]] = {}
+        # ---- verified-session state (optimistic trust layer)
+        self.trust = trust
+        self.records: Dict[int, SessionRecord] = {}
+        self.session_log: List[Dict] = []       # commit/finalize/revoke events
+        self._window = (ChallengeWindow(trust.challenge_window)
+                        if trust is not None else None)
+        # audit_rate is the pool-wide sampled fraction (same contract as
+        # OptimisticProtocol): each verifier draws its share
+        self._auditors = (VerifierPool(
+            trust.num_verifiers,
+            trust.audit_rate / max(trust.num_verifiers, 1),
+            trust.lazy_verifier_prob, trust.seed)
+            if trust is not None else None)
+        self._finalized: set = set()
+
+    @property
+    def verified(self) -> bool:
+        return self.trust is not None
+
+    @property
+    def completed(self) -> Dict[int, List[int]]:
+        """Finished — and, in verified mode, *finalized* — requests, in
+        request-submission order (deterministic output)."""
+        if not self.verified:
+            return {rid: self._done[rid] for rid in self._submit_order
+                    if rid in self._done}
+        return {rid: self._done[rid] for rid in self._submit_order
+                if rid in self._finalized}
+
+    @property
+    def pending_finalization(self) -> List[int]:
+        """Finished requests still inside their challenge window."""
+        if not self.verified:
+            return []
+        return [rid for rid in self._submit_order
+                if rid in self._done and rid not in self._finalized
+                and not self.records[rid].revoked]
 
     def submit(self, requests: Iterable[dict]):
         for r in requests:
             self.queue.append(r)
+            self._submit_order.append(r["id"])
 
     def _fill_slots(self):
         # batch-synchronous refill: new requests enter only when the whole
@@ -71,23 +159,60 @@ class ServingEngine:
                 r = self.queue.popleft()
                 slot.request_id = r["id"]
                 slot.pos = 0
-                slot.remaining_prompt = list(np.asarray(r["prompt"]))
+                slot.prompt = np.asarray(r["prompt"], np.int32).reshape(-1)
+                slot.cursor = 0
                 slot.to_generate = int(r["max_new_tokens"])
                 slot.generated = []
+                if self.verified:
+                    self.records[r["id"]] = SessionRecord(request_id=r["id"])
+
+    def _emit(self, slot: SlotState, token: int) -> None:
+        slot.generated.append(token)
+        if self.verified:
+            self.records[slot.request_id].append(self.tick, token)
+
+    def _finish(self, slot: SlotState) -> None:
+        rid = slot.request_id
+        self._done[rid] = slot.generated[:slot.to_generate]
+        slot.request_id = -1
+        if not self.verified:
+            return
+        rec = self.records[rid]
+        root = rec.seal() if rec.leaves else ""
+        self.session_log.append({"event": "commit", "request": rid,
+                                 "root": root[:16], "tick": self.tick,
+                                 "leaves": len(rec.leaves)})
+        self._window.enter(rid, self.tick)
+
+    def _expire_windows(self) -> None:
+        for rid in self._window.expire(self.tick):
+            rec = self.records[rid]
+            if rec.revoked:
+                continue
+            rec.finalized = True
+            self._finalized.add(rid)
+            self.session_log.append({"event": "finalize", "request": rid,
+                                     "tick": self.tick})
 
     def step(self):
         """One engine tick: each active slot consumes one prompt token or
         generates one token.  (All slots share one decode position per
-        tick; a per-slot position mask keeps semantics correct.)"""
+        tick; a per-slot position mask keeps semantics correct.)  In
+        verified mode, ticks keep running after the queue drains until
+        every challenge window has closed."""
         self._fill_slots()
         if not any(s.active for s in self.slots):
+            if self.verified and len(self._window):
+                self.tick += 1               # idle tick: windows still age
+                self._expire_windows()
+                return bool(len(self._window))
             return False
         tokens = np.zeros((self.batch, 1), np.int32)
         for i, s in enumerate(self.slots):
             if not s.active:
                 continue
-            if s.remaining_prompt:
-                tokens[i, 0] = s.remaining_prompt[0]
+            if s.prefilling:
+                tokens[i, 0] = s.prompt[s.cursor]
             elif s.generated:
                 tokens[i, 0] = s.generated[-1]
         pos = max((s.pos for s in self.slots if s.active), default=0)
@@ -95,21 +220,23 @@ class ServingEngine:
             self.params, self.caches,
             {"tokens": jnp.asarray(tokens), "pos": jnp.int32(pos)})
         nxt = np.asarray(nxt)
+        self.tick += 1
         for i, s in enumerate(self.slots):
             if not s.active:
                 continue
-            if s.remaining_prompt:
-                s.remaining_prompt.pop(0)
-                if not s.remaining_prompt:
-                    s.generated.append(int(nxt[i]))  # first generated token
+            if s.prefilling:
+                s.cursor += 1
+                if not s.prefilling:
+                    self._emit(s, int(nxt[i]))   # first generated token
             else:
-                s.generated.append(int(nxt[i]))
+                self._emit(s, int(nxt[i]))
             s.pos += 1
-            done = (not s.remaining_prompt
+            done = (not s.prefilling
                     and len(s.generated) >= s.to_generate)
             if done or s.pos >= self.cache_len - 1:
-                self.completed[s.request_id] = s.generated[:s.to_generate]
-                s.request_id = -1
+                self._finish(s)
+        if self.verified:
+            self._expire_windows()
         return True
 
     def run(self, max_ticks: int = 10_000) -> Dict[int, List[int]]:
@@ -117,3 +244,43 @@ class ServingEngine:
         while self.step() and ticks < max_ticks:
             ticks += 1
         return self.completed
+
+    # ------------------------------------------------ audits (verified)
+    def audit_session(self, request_id: int, verifier: int = 0) -> Dict:
+        """Spot-check sampled leaves of a session commitment: each
+        sampled (tick, token) record is re-digested and its Merkle path
+        checked against the sealed root.  A mismatch (the served stream
+        was altered after commitment) revokes the request: it will never
+        finalize."""
+        if not self.verified:
+            raise ValueError("engine was not started with a TrustConfig")
+        rec = self.records[request_id]
+        if not rec.root:
+            raise ValueError(f"request {request_id} not sealed yet")
+        tree = MerkleTree(rec.leaves)
+        sampled = self._auditors.sample_leaves(request_id, verifier,
+                                               len(rec.leaves))
+        mismatches = []
+        for leaf in sampled:
+            recomputed = _tick_leaf(request_id, rec.ticks[leaf],
+                                    rec.tokens[leaf])
+            ok = (recomputed == rec.leaves[leaf]
+                  and MerkleTree.verify(rec.root, recomputed,
+                                        tree.prove(leaf)))
+            if not ok:
+                mismatches.append(leaf)
+        if mismatches:
+            rec.revoked = True
+            rec.finalized = False        # a revoked record is never final
+            self._finalized.discard(request_id)
+            self._window.revoke(request_id)
+            self.session_log.append({"event": "revoke", "request": request_id,
+                                     "leaves": mismatches})
+        return {"request": request_id, "sampled": sampled,
+                "mismatches": mismatches, "revoked": rec.revoked}
+
+    def audit_all(self) -> List[Dict]:
+        return [self.audit_session(rid, v)
+                for rid in list(self.records)
+                if self.records[rid].root
+                for v in range(self._auditors.num_verifiers)]

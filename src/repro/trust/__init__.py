@@ -1,0 +1,47 @@
+"""Optimistic commit-challenge-audit trust layer.
+
+The paper's B-MoE buys robustness with full M-way redundancy: every edge
+recomputes every activated expert and the blockchain layer majority-votes
+all M copies (paper Step 3) — the latency/bandwidth overhead its Fig. 4b
+measures.  This subsystem implements the optimistic alternative: one
+executor edge computes, commits a Merkle root over its per-expert output
+chunks on-chain, the result is accepted optimistically, and a verifier
+pool spot-checks a sample of leaves during an asynchronous challenge
+window.  A mismatch yields a compact fraud proof (Merkle path +
+recomputed leaf) that anyone can check against the on-chain root; a
+confirmed proof slashes the executor's stake, feeds the existing
+reputation ledger (exclusion of repeat offenders), and escalates the
+disputed round to the paper's full redundancy vote as the fallback
+court.  Expected verification cost drops from O(M) recomputes per round
+to O(1) + audit_rate, with the same trust guarantee in the limit: a
+cheating executor is caught with probability 1-(1-audit_rate)^k when it
+corrupts k committed leaves.
+
+Modules
+-------
+- ``commitments``: Merkle trees over per-expert output chunks; one root
+  digest per round goes on-chain.
+- ``audit``: the verifier pool — leaf sampling, recompute against the
+  stored expert (by CID, storage layer), fraud-proof construction and
+  verification.
+- ``slashing``: stake/deposit accounting; confirmed fraud proofs slash
+  the executor and update the ReputationLedger; the dispute court
+  escalates to the full redundancy vote.
+- ``protocol``: the round state machine (commit -> optimistic accept ->
+  async challenge window -> finalize/rollback) gluing the above to the
+  ledger.
+"""
+from repro.trust.audit import (AuditReport, FraudProof, VerifierPool,
+                               verify_fraud_proof)
+from repro.trust.commitments import (MerklePath, MerkleTree, RoundCommitment,
+                                     commit_outputs, leaf_digest)
+from repro.trust.protocol import (OptimisticProtocol, RoundPhase, RoundState,
+                                  TrustConfig)
+from repro.trust.slashing import DisputeCourt, StakeBook
+
+__all__ = [
+    "AuditReport", "FraudProof", "VerifierPool", "verify_fraud_proof",
+    "MerklePath", "MerkleTree", "RoundCommitment", "commit_outputs",
+    "leaf_digest", "OptimisticProtocol", "RoundPhase", "RoundState",
+    "TrustConfig", "DisputeCourt", "StakeBook",
+]

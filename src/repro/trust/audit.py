@@ -1,0 +1,155 @@
+"""The verifier pool: sampled recompute and fraud proofs.
+
+Each verifier independently samples committed leaves with probability
+``audit_rate``, fetches the expert that produced the leaf from the
+storage layer by CID (content-addressed, so a tampered replica is
+self-evident), recomputes the chunk on the published task, and compares
+digests.  A mismatch yields a ``FraudProof``: the claimed leaf chunk plus
+its Merkle path — enough for anyone holding the on-chain root to confirm
+(a) the executor really committed that leaf and (b) the honest recompute
+disagrees.  An executor corrupting ``k`` leaves is caught by one honest
+verifier with probability ``1 - (1-audit_rate)**k``; with ``v``
+independent honest verifiers the exponent becomes ``k*v``.
+
+Lazy verifiers (rubber-stampers that skip their recompute) are modeled
+with ``lazy_prob`` — they sample leaves but never raise proofs, which is
+how audit-evasion scenarios are expressed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.trust.commitments import (MerklePath, MerkleTree, RoundCommitment,
+                                     leaf_digest)
+
+# recompute_fn(expert_index, batch_slice) -> honest output chunk
+RecomputeFn = Callable[[int, slice], np.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class FraudProof:
+    round_id: int
+    executor: int
+    leaf_index: int
+    expert: int
+    claimed_chunk: np.ndarray               # the committed (bad) leaf data
+    path: MerklePath
+    claimed_digest: str
+    recomputed_digest: str
+    verifier: int = -1
+
+    def compact_size_bytes(self) -> int:
+        """On-wire size: one chunk + log2(leaves) siblings (32B each)."""
+        return self.claimed_chunk.nbytes + 32 * len(self.path.siblings)
+
+
+@dataclasses.dataclass
+class AuditReport:
+    """One verifier pass over one round commitment."""
+    round_id: int
+    verifier: int
+    sampled_leaves: List[int]
+    fraud_proofs: List[FraudProof]
+    recomputed_leaves: int = 0
+    lazy: bool = False
+
+    @property
+    def clean(self) -> bool:
+        return not self.fraud_proofs
+
+
+def verify_fraud_proof(root: str, proof: FraudProof,
+                       recompute_fn: Optional[RecomputeFn] = None,
+                       batch_slice: Optional[slice] = None) -> bool:
+    """Anyone-can-check verdict on a fraud proof.
+
+    Confirms (1) the claimed chunk is really committed under ``root``
+    (Merkle path), and (2) its digest differs from the honest recompute.
+    When ``recompute_fn`` is given the recompute is redone here (the
+    court's own computation); otherwise the proof's recorded
+    ``recomputed_digest`` is trusted (a verifier-signed attestation).
+    """
+    claimed = leaf_digest(proof.claimed_chunk)
+    if claimed != proof.claimed_digest:
+        return False
+    if not MerkleTree.verify(root, claimed, proof.path):
+        return False                      # not actually committed: griefing
+    if recompute_fn is not None and batch_slice is not None:
+        honest = leaf_digest(np.asarray(recompute_fn(proof.expert,
+                                                     batch_slice)))
+        return honest != claimed
+    return proof.recomputed_digest != claimed
+
+
+class VerifierPool:
+    """``num_verifiers`` independent auditors with a shared audit rate.
+
+    Deterministic given ``seed`` and the round id, so audit schedules are
+    reproducible (and an executor cannot predict them without the seed —
+    the simulation analogue of a VRF-drawn audit lottery).
+    """
+
+    def __init__(self, num_verifiers: int = 3, audit_rate: float = 0.1,
+                 lazy_prob: float = 0.0, seed: int = 0):
+        self.num_verifiers = num_verifiers
+        self.audit_rate = float(audit_rate)
+        self.lazy_prob = float(lazy_prob)
+        self._seed = seed
+
+    def _rng(self, round_id: int, verifier: int,
+             salt: int = 0) -> np.random.Generator:
+        return np.random.default_rng(
+            ((self._seed * 1_000_003 + round_id) * 97 + verifier) * 31 + salt)
+
+    def sample_leaves(self, round_id: int, verifier: int,
+                      num_leaves: int) -> List[int]:
+        rng = self._rng(round_id, verifier)
+        keep = rng.random(num_leaves) < self.audit_rate
+        return [int(i) for i in np.nonzero(keep)[0]]
+
+    def audit_one(self, commitment: RoundCommitment,
+                  recompute_fn: RecomputeFn, verifier: int) -> AuditReport:
+        """One verifier's pass: sample, recompute, emit fraud proofs."""
+        # distinct stream from sample_leaves: the lazy coin must not be
+        # correlated with which leaves get sampled (a shared first draw
+        # would silently lower leaf 0's effective audit rate)
+        lazy = bool(self._rng(commitment.round_id, verifier,
+                              salt=1).random() < self.lazy_prob)
+        sampled = self.sample_leaves(commitment.round_id, verifier,
+                                     commitment.num_leaves)
+        report = AuditReport(round_id=commitment.round_id, verifier=verifier,
+                             sampled_leaves=sampled, fraud_proofs=[],
+                             lazy=lazy)
+        if lazy:
+            return report                  # rubber-stamp: no recompute
+        tree = commitment.tree()
+        for leaf in sampled:
+            e, _, sl = commitment.leaf_coords(leaf)
+            honest = leaf_digest(np.asarray(recompute_fn(e, sl)))
+            report.recomputed_leaves += 1
+            claimed = commitment.leaf_digests[leaf]
+            if honest != claimed:
+                report.fraud_proofs.append(FraudProof(
+                    round_id=commitment.round_id,
+                    executor=commitment.executor, leaf_index=leaf, expert=e,
+                    claimed_chunk=commitment.leaf_chunk(leaf),
+                    path=tree.prove(leaf), claimed_digest=claimed,
+                    recomputed_digest=honest, verifier=verifier))
+        return report
+
+    def audit(self, commitment: RoundCommitment,
+              recompute_fn: RecomputeFn,
+              verifiers: Optional[Sequence[int]] = None) -> List[AuditReport]:
+        ids = range(self.num_verifiers) if verifiers is None else verifiers
+        return [self.audit_one(commitment, recompute_fn, v) for v in ids]
+
+    def detection_probability(self, corrupted_leaves: int,
+                              honest_verifiers: Optional[int] = None) -> float:
+        """Analytic bound: P[>=1 corrupted leaf sampled by an honest
+        verifier] = 1 - (1-audit_rate)^(k*v)."""
+        v = (self.num_verifiers if honest_verifiers is None
+             else honest_verifiers)
+        return 1.0 - (1.0 - self.audit_rate) ** (corrupted_leaves * v)

@@ -1,0 +1,149 @@
+"""Merkle commitments over per-expert output chunks.
+
+The executor edge splits each expert's result on the published task into
+``chunks_per_expert`` contiguous batch chunks, digests every chunk into a
+leaf, and commits the single Merkle root on-chain.  Auditors later
+recompute sampled leaves; a mismatching leaf plus its Merkle path is a
+fraud proof checkable by anyone holding only the 32-byte root — the
+commitment is what makes O(1)-sized proofs possible.
+
+Leaf ordering is row-major over (expert, chunk): leaf index
+``e * chunks_per_expert + c`` covers expert ``e``'s rows
+``[chunk_bounds[c], chunk_bounds[c+1])`` of the batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.ledger import digest_bytes
+
+
+def leaf_digest(chunk: np.ndarray) -> str:
+    """Digest of one output chunk (shape/dtype-sensitive, like
+    ledger.digest_array, but domain-separated from interior nodes)."""
+    a = np.ascontiguousarray(chunk)
+    return digest_bytes(b"leaf:" + a.tobytes() + str(a.shape).encode()
+                        + str(a.dtype).encode())
+
+
+def _node_digest(left: str, right: str) -> str:
+    return hashlib.sha256(b"node:" + left.encode() + right.encode()).hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class MerklePath:
+    """Authentication path for one leaf: sibling digests bottom-up plus
+    the leaf's index (the index determines left/right at each level)."""
+    index: int
+    siblings: Tuple[str, ...]
+
+
+class MerkleTree:
+    """Binary Merkle tree over a list of leaf digests.
+
+    Odd levels are padded by duplicating the last node (Bitcoin-style),
+    so any leaf count works.  ``prove``/``verify`` round-trip: a path is
+    valid iff folding the leaf digest up through the siblings reproduces
+    the root.
+    """
+
+    def __init__(self, leaves: Sequence[str]):
+        if not leaves:
+            raise ValueError("Merkle tree needs at least one leaf")
+        self.leaves = list(leaves)
+        self.levels: List[List[str]] = [list(leaves)]
+        while len(self.levels[-1]) > 1:
+            cur = self.levels[-1]
+            if len(cur) % 2:
+                cur = cur + [cur[-1]]
+            self.levels.append([_node_digest(cur[i], cur[i + 1])
+                                for i in range(0, len(cur), 2)])
+
+    @property
+    def root(self) -> str:
+        return self.levels[-1][0]
+
+    def prove(self, index: int) -> MerklePath:
+        if not 0 <= index < len(self.leaves):
+            raise IndexError(index)
+        siblings = []
+        i = index
+        for level in self.levels[:-1]:
+            padded = level + [level[-1]] if len(level) % 2 else level
+            sib = i + 1 if i % 2 == 0 else i - 1
+            siblings.append(padded[sib])
+            i //= 2
+        return MerklePath(index=index, siblings=tuple(siblings))
+
+    @staticmethod
+    def verify(root: str, leaf: str, path: MerklePath) -> bool:
+        h = leaf
+        i = path.index
+        for sib in path.siblings:
+            h = _node_digest(h, sib) if i % 2 == 0 else _node_digest(sib, h)
+            i //= 2
+        return h == root
+
+
+def chunk_bounds(batch: int, chunks: int) -> List[int]:
+    """Contiguous near-equal chunk boundaries: len == chunks+1."""
+    chunks = max(1, min(chunks, batch))
+    edges = np.linspace(0, batch, chunks + 1).astype(int)
+    return list(edges)
+
+
+@dataclasses.dataclass
+class RoundCommitment:
+    """What the executor publishes for one round.
+
+    Only ``root`` goes on-chain; the claimed outputs (the leaf data) stay
+    off-chain with the executor, retrievable by auditors on demand.
+    """
+    round_id: int
+    executor: int
+    root: str
+    num_experts: int
+    chunks_per_expert: int
+    bounds: List[int]                       # batch chunk boundaries
+    leaf_digests: List[str]
+    claimed: np.ndarray                     # (N, B, C) executor's outputs
+    task_digest: str = ""
+
+    @property
+    def num_leaves(self) -> int:
+        return len(self.leaf_digests)
+
+    def leaf_coords(self, leaf: int) -> Tuple[int, int, slice]:
+        """leaf index -> (expert, chunk, batch slice)."""
+        e, c = divmod(leaf, self.chunks_per_expert)
+        return e, c, slice(self.bounds[c], self.bounds[c + 1])
+
+    def leaf_chunk(self, leaf: int) -> np.ndarray:
+        e, _, sl = self.leaf_coords(leaf)
+        return self.claimed[e, sl]
+
+    def tree(self) -> MerkleTree:
+        return MerkleTree(self.leaf_digests)
+
+
+def commit_outputs(outputs, *, round_id: int, executor: int,
+                   chunks_per_expert: int = 4,
+                   task_digest: str = "") -> RoundCommitment:
+    """Build the executor's round commitment from its claimed per-expert
+    outputs ``(N, B, C)``."""
+    claimed = np.asarray(outputs)
+    n_experts, batch = claimed.shape[:2]
+    bounds = chunk_bounds(batch, chunks_per_expert)
+    chunks = len(bounds) - 1
+    digests = [leaf_digest(claimed[e, bounds[c]:bounds[c + 1]])
+               for e in range(n_experts) for c in range(chunks)]
+    tree = MerkleTree(digests)
+    return RoundCommitment(round_id=round_id, executor=executor,
+                           root=tree.root, num_experts=n_experts,
+                           chunks_per_expert=chunks, bounds=bounds,
+                           leaf_digests=digests, claimed=claimed,
+                           task_digest=task_digest)

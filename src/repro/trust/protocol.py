@@ -1,0 +1,207 @@
+"""The optimistic round state machine.
+
+One round of optimistically-verified execution moves through:
+
+    COMMITTED  -- executor publishes outputs + Merkle root (on-chain)
+        |
+    ACCEPTED   -- the system uses the result immediately (optimistic)
+        |                         ... async challenge window (in rounds) ...
+        +--> FINALIZED            no confirmed fraud inside the window
+        +--> CHALLENGED           a fraud proof was raised
+                 +--> ROLLED_BACK  court confirms: slash + undo the round
+                 +--> FINALIZED    court clears: griefing attempt rejected
+
+The protocol object owns the verifier pool, the stake book, and the
+dispute court; the host system (``BMoESystem``, ``ServingEngine``)
+supplies the recompute function and applies rollbacks, keeping the trust
+layer independent of what is being verified.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.reputation import ReputationLedger
+from repro.trust.audit import (AuditReport, FraudProof, RecomputeFn,
+                               VerifierPool, verify_fraud_proof)
+from repro.trust.commitments import RoundCommitment, commit_outputs
+from repro.trust.slashing import (DisputeCourt, StakeBook, Verdict,
+                                  reputation_fraud_update)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrustConfig:
+    """Knobs of the commit-challenge-audit protocol."""
+    audit_rate: float = 0.1            # total fraction of leaves audited
+    #                                    (split across the verifier pool)
+    num_verifiers: int = 3             # independent auditors per round
+    chunks_per_expert: int = 4         # Merkle leaves per expert output
+    challenge_window: int = 2          # rounds before finalization
+    stake: float = 1.0                 # executor deposit
+    slash_fraction: float = 0.5        # stake burned per confirmed fraud
+    bounty_fraction: float = 0.5       # slashed amount paid to reporter
+    min_stake: float = 0.25            # bond needed to execute
+    lazy_verifier_prob: float = 0.0    # P[a verifier rubber-stamps]
+    seed: int = 0
+
+
+class RoundPhase(enum.Enum):
+    COMMITTED = "committed"
+    ACCEPTED = "accepted"
+    CHALLENGED = "challenged"
+    FINALIZED = "finalized"
+    ROLLED_BACK = "rolled_back"
+
+
+@dataclasses.dataclass
+class RoundState:
+    round_id: int
+    executor: int
+    commitment: RoundCommitment
+    phase: RoundPhase
+    deadline: int                          # round id after which finalized
+    reports: List[AuditReport] = dataclasses.field(default_factory=list)
+    proofs: List[FraudProof] = dataclasses.field(default_factory=list)
+    verdict: Optional[Verdict] = None
+
+
+class OptimisticProtocol:
+    """Commit -> optimistic accept -> async challenge window ->
+    finalize/rollback, over any per-round (N, B, C) output tensor."""
+
+    def __init__(self, cfg: TrustConfig, num_edges: int,
+                 reputation: Optional[ReputationLedger] = None):
+        self.cfg = cfg
+        self.num_edges = num_edges
+        self.reputation = reputation
+        # cfg.audit_rate is the pool-wide sampled fraction; each verifier
+        # draws its share so total recompute stays at audit_rate
+        self.verifiers = VerifierPool(
+            cfg.num_verifiers, cfg.audit_rate / max(cfg.num_verifiers, 1),
+            cfg.lazy_verifier_prob, cfg.seed)
+        self.stakes = StakeBook(num_edges, cfg.stake, cfg.slash_fraction,
+                                cfg.bounty_fraction, cfg.min_stake)
+        self.court = DisputeCourt(num_edges)
+        self.rounds: Dict[int, RoundState] = {}
+        self.clock = 0                     # latest round id seen
+        self.stats = {"committed": 0, "finalized": 0, "rolled_back": 0,
+                      "audited_leaves": 0, "fraud_proofs": 0,
+                      "escalations": 0}
+
+    # -------------------------------------------------------- executors
+    def pick_executor(self, round_id: int) -> int:
+        """Rotate over bonded, non-excluded edges."""
+        eligible = [e for e in self.stakes.bonded_edges()
+                    if self.reputation is None
+                    or not self.reputation.excluded[e]]
+        if not eligible:                   # everyone slashed out: reset to 0
+            eligible = list(range(self.num_edges))
+        return eligible[round_id % len(eligible)]
+
+    # ------------------------------------------------------------ commit
+    def commit(self, round_id: int, executor: int, outputs,
+               task_digest: str = "") -> RoundState:
+        commitment = commit_outputs(
+            outputs, round_id=round_id, executor=executor,
+            chunks_per_expert=self.cfg.chunks_per_expert,
+            task_digest=task_digest)
+        state = RoundState(round_id=round_id, executor=executor,
+                           commitment=commitment, phase=RoundPhase.ACCEPTED,
+                           deadline=round_id + self.cfg.challenge_window)
+        self.rounds[round_id] = state
+        self.clock = max(self.clock, round_id)
+        self.stats["committed"] += 1
+        return state
+
+    # ------------------------------------------------------------- audit
+    def run_audits(self, round_id: int,
+                   recompute_fn: RecomputeFn) -> List[FraudProof]:
+        """All verifiers audit the round; raised proofs are court-checked
+        against the committed root before they count (so a lying verifier
+        cannot grief with a fabricated proof)."""
+        state = self.rounds[round_id]
+        if state.phase is not RoundPhase.ACCEPTED:
+            return []                  # window already closed or resolved
+        reports = self.verifiers.audit(state.commitment, recompute_fn)
+        state.reports.extend(reports)
+        confirmed: List[FraudProof] = []
+        for rep in reports:
+            self.stats["audited_leaves"] += rep.recomputed_leaves
+            for proof in rep.fraud_proofs:
+                e, _, sl = state.commitment.leaf_coords(proof.leaf_index)
+                if verify_fraud_proof(state.commitment.root, proof,
+                                      recompute_fn, sl):
+                    confirmed.append(proof)
+        if confirmed:
+            state.phase = RoundPhase.CHALLENGED
+            state.proofs.extend(confirmed)
+            self.stats["fraud_proofs"] += len(confirmed)
+        return confirmed
+
+    # --------------------------------------------------------- challenge
+    def resolve(self, round_id: int, verdict: Verdict) -> RoundState:
+        """Court outcome for a challenged round: rollback if the executor
+        is guilty (slash + reputation), else finalize (griefing case)."""
+        state = self.rounds[round_id]
+        state.verdict = verdict
+        self.stats["escalations"] += 1
+        if verdict.executor_guilty:
+            # one slash per convicted round (proofs for further leaves of
+            # the same commitment are the same offense)
+            self.stakes.slash(state.proofs[0])
+            reputation_fraud_update(self.reputation, state.executor,
+                                    self.num_edges)
+            state.phase = RoundPhase.ROLLED_BACK
+            self.stats["rolled_back"] += 1
+        else:
+            state.phase = RoundPhase.FINALIZED
+            self.stats["finalized"] += 1
+        return state
+
+    # ---------------------------------------------------------- finalize
+    def advance(self, now: int) -> List[int]:
+        """Close challenge windows: every ACCEPTED round whose deadline
+        passed without a confirmed fraud proof becomes FINALIZED."""
+        self.clock = max(self.clock, now)
+        done = []
+        for rid, state in self.rounds.items():
+            if state.phase is RoundPhase.ACCEPTED and now >= state.deadline:
+                state.phase = RoundPhase.FINALIZED
+                self.stats["finalized"] += 1
+                done.append(rid)
+        return done
+
+    def pending(self) -> List[int]:
+        return [rid for rid, s in self.rounds.items()
+                if s.phase is RoundPhase.ACCEPTED]
+
+
+class ChallengeWindow:
+    """Minimal tick-based finalization tracker for streaming hosts (the
+    serving engine): items become final ``window`` ticks after entry
+    unless revoked."""
+
+    def __init__(self, window: int):
+        self.window = int(window)
+        self._pending: Dict[int, int] = {}      # item id -> deadline tick
+        self.revoked: List[int] = []
+
+    def enter(self, item_id: int, now: int) -> None:
+        self._pending[item_id] = now + self.window
+
+    def revoke(self, item_id: int) -> None:
+        if item_id in self._pending:
+            del self._pending[item_id]
+            self.revoked.append(item_id)
+
+    def expire(self, now: int) -> List[int]:
+        done = [i for i, dl in self._pending.items() if now >= dl]
+        for i in done:
+            del self._pending[i]
+        return done
+
+    def __len__(self) -> int:
+        return len(self._pending)
