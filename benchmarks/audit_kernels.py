@@ -1,0 +1,176 @@
+"""Batched vs eager audit recompute: the CI perf gate for the audit
+engine.
+
+Replays the optimistic auditor's round work at the acceptance shape
+(``num_experts=8, audit_rate=0.2, batch=512``, 2-layer MLP experts) over
+many audit lotteries and times the two paths end-to-end (recompute +
+leaf hashing + report construction):
+
+- **eager**  — ``VerifierPool.audit``: one Python-loop dispatch and one
+  ``leaf_digest`` per sampled (expert, chunk) pair per verifier, the
+  pre-batched reference oracle;
+- **batched** — ``VerifierPool.audit_batched``: one planned, deduped,
+  jitted grouped recompute call (``kernels.ops.audit_mlp``, expert and
+  row gathers fused on device) plus one fused ``leaf_digest_batch``
+  pass per round.
+
+Leaves are committed at ``chunks_per_expert=16`` — finer fraud
+localization than the protocol's default 4, and the regime the batched
+engine exists for: many small sampled chunks, where the eager path pays
+a full Python/dispatch round-trip per leaf.  Timing takes the best of
+``--trials`` interleaved passes (min suppresses CI-runner load spikes).
+
+Writes ``BENCH_audit.json`` (wall-clock per round, speedup, deduped
+verify-leaf counts) and exits non-zero if batched is slower than eager
+(``--min-speedup``, default 1.0 — the CI gate; the repo's acceptance
+target on an idle CPU is >=3x).  Storage fetch-by-CID is identical in
+both paths and excluded.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import experts as ex
+from repro.kernels import ops as kops
+from repro.trust.audit import VerifierPool, pack_audit_batch
+from repro.trust.commitments import chunk_bounds, commit_outputs
+
+NUM_EXPERTS = 8
+AUDIT_RATE = 0.2
+BATCH = 512
+CHUNKS_PER_EXPERT = 16
+IN_DIM = 784
+NUM_VERIFIERS = 3
+
+
+def _setup(seed: int = 0):
+    params, _ = ex.make_expert_bank("mlp", NUM_EXPERTS,
+                                    jax.random.PRNGKey(seed), in_dim=IN_DIM,
+                                    out=10)
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(BATCH, IN_DIM)).astype(np.float32)
+    bounds = chunk_bounds(BATCH, CHUNKS_PER_EXPERT)
+    # the executor's commitment pass: per-chunk eager apply, the same
+    # canonical chunk compute both auditors must reproduce bit-exactly
+    p_np = [jax.tree_util.tree_map(lambda a, e=e: np.asarray(a[e]), params)
+            for e in range(NUM_EXPERTS)]
+    honest = np.stack([
+        np.concatenate([np.asarray(ex.mlp_expert_apply(
+            p_np[e], jnp.asarray(x[bounds[c]:bounds[c + 1]])))
+            for c in range(len(bounds) - 1)])
+        for e in range(NUM_EXPERTS)])
+    return params, p_np, x, honest
+
+
+def _make_eager_fn(p_np, x):
+    def recompute(e: int, sl: slice):
+        return np.asarray(ex.mlp_expert_apply(p_np[e], jnp.asarray(x[sl])))
+    return recompute
+
+
+def _make_batch_fn(params, x):
+    """Mirrors BMoESystem._make_batched_recompute (minus the shared
+    storage round-trip): bank and task stay device-resident, only row
+    indices and expert ids cross the host boundary, and the sample
+    count is bucketed to a multiple of 4 so jit retraces stay
+    bounded."""
+    xd = jnp.asarray(x)
+    call = jax.jit(lambda bank, xdv, idx, gid:
+                   kops.audit_mlp(bank, xdv[idx], gid))
+
+    def batch_recompute(expert_ids, slices):
+        idx, gid, n = pack_audit_batch(expert_ids, slices)
+        return np.asarray(call(params, xd, jnp.asarray(idx),
+                               jnp.asarray(gid))[:n])
+
+    return batch_recompute
+
+
+def main(rounds: int = 30, json_path: str = "BENCH_audit.json",
+         min_speedup: float = 1.0, trials: int = 3):
+    params, p_np, x, honest = _setup()
+    # pool-wide audit_rate split across verifiers, as in OptimisticProtocol
+    pool = VerifierPool(NUM_VERIFIERS, AUDIT_RATE / NUM_VERIFIERS, seed=0)
+    eager_fn = _make_eager_fn(p_np, x)
+    batch_fn = _make_batch_fn(params, x)
+    coms = [commit_outputs(honest, round_id=r, executor=0,
+                           chunks_per_expert=CHUNKS_PER_EXPERT)
+            for r in range(rounds)]
+
+    for com in coms:                       # warmup: compile every sample-
+        pool.audit_batched(com, batch_fn)  # count bucket the lotteries hit
+    for com in coms[:2]:
+        pool.audit(com, eager_fn)
+
+    t_eager, t_batched = float("inf"), float("inf")
+    eager_reports = batched_reports = None
+    for _ in range(trials):                # interleaved; min kills spikes
+        t0 = time.perf_counter()
+        eager_reports = [pool.audit(com, eager_fn) for com in coms]
+        t_eager = min(t_eager, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        batched_reports = [pool.audit_batched(com, batch_fn) for com in coms]
+        t_batched = min(t_batched, time.perf_counter() - t0)
+
+    # sanity: the two paths must agree before a speedup means anything
+    for evs, bvs in zip(eager_reports, batched_reports):
+        assert [r.sampled_leaves for r in evs] == \
+               [r.sampled_leaves for r in bvs]
+        assert all(r.clean for r in evs) and all(r.clean for r in bvs)
+
+    eager_leaves = sum(r.recomputed_leaves for evs in eager_reports
+                       for r in evs)
+    batched_leaves = sum(r.recomputed_leaves for bvs in batched_reports
+                         for r in bvs)
+    speedup = t_eager / max(t_batched, 1e-12)
+    chunk = BATCH // CHUNKS_PER_EXPERT
+    result = {
+        "config": {"num_experts": NUM_EXPERTS, "audit_rate": AUDIT_RATE,
+                   "batch": BATCH, "chunks_per_expert": CHUNKS_PER_EXPERT,
+                   "in_dim": IN_DIM, "num_verifiers": NUM_VERIFIERS,
+                   "rounds": rounds, "trials": trials},
+        "eager_s_per_round": t_eager / rounds,
+        "batched_s_per_round": t_batched / rounds,
+        "speedup": speedup,
+        # verify-compute ledger, in expert-evaluations x samples (the
+        # same yardstick as BMoESystem.verification_report)
+        "eager_verify_evals": eager_leaves * chunk,
+        "batched_verify_evals": batched_leaves * chunk,
+        "dedupe_savings": 1.0 - batched_leaves / max(eager_leaves, 1),
+        "min_speedup_gate": min_speedup,
+    }
+    with open(json_path, "w") as f:
+        json.dump(result, f, indent=2)
+    rows = [
+        row("audit_eager", t_eager / rounds * 1e6,
+            f"recomputed_leaves={eager_leaves}"),
+        row("audit_batched", t_batched / rounds * 1e6,
+            f"recomputed_leaves={batched_leaves};speedup_x={speedup:.2f}"),
+        row("audit_claims", 0.0,
+            f"batched_not_slower={speedup >= min_speedup};"
+            f"batched_3x_faster={speedup >= 3.0};"
+            f"dedupe_savings={result['dedupe_savings']:.2f}"),
+    ]
+    if speedup < min_speedup:
+        raise SystemExit(
+            f"perf gate: batched audit {speedup:.2f}x vs eager, "
+            f"below --min-speedup {min_speedup}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--json", default="BENCH_audit.json")
+    ap.add_argument("--min-speedup", type=float, default=1.0)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(args.rounds, args.json, args.min_speedup, args.trials)

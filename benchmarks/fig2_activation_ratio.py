@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import BATCH, ROUNDS, dataset, make_system, row, train_system
+from benchmarks.common import ROUNDS, dataset, make_system, row, train_system
 from repro.core.attacks import AttackConfig
 
 MALICIOUS = (7, 8, 9)

@@ -7,8 +7,6 @@ the modeled comm time (1 Gbps links) — labeled simulation, as the paper's
 absolute numbers depend on their edge hardware."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import ROUNDS, make_system, row, train_system
 from repro.core.attacks import AttackConfig
 from repro.core.storage import serialize_tree

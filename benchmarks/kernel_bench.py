@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import row
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 
 def _time(fn, *args, iters=20):

@@ -4,7 +4,6 @@
 """
 from __future__ import annotations
 
-import glob
 import json
 
 from repro.launch.roofline import roofline_row

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import dataset, make_system, row
+from benchmarks.common import dataset, row
 from repro.core.attacks import AttackConfig
 from repro.core.bmoe import BMoEConfig, BMoESystem
 from repro.core.reputation import ReputationConfig

@@ -18,6 +18,8 @@ still detected and slashed.
 """
 from __future__ import annotations
 
+import os
+
 from benchmarks.common import ROUNDS, make_system, row, train_system
 from repro.core.attacks import AttackConfig
 from repro.core.storage import serialize_tree
@@ -36,8 +38,10 @@ def _comm_bytes(sys_):
 def main(kind: str = "fmnist"):
     rows = []
     # enough rounds that the rotating schedule hands malicious edges the
-    # executor role several times (attack_prob=0.2 needs opportunities)
-    rounds = max(ROUNDS // 3, 24)
+    # executor role several times (attack_prob=0.2 needs opportunities);
+    # REPRO_BENCH_MIN_ROUNDS lowers the floor for CI smoke runs
+    min_rounds = int(os.environ.get("REPRO_BENCH_MIN_ROUNDS", "24"))
+    rounds = max(ROUNDS // 3, min_rounds)
     atk = AttackConfig(malicious_edges=(7, 8, 9), attack_prob=0.2,
                        noise_std=5.0)
 

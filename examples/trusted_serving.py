@@ -11,9 +11,6 @@ import subprocess
 import sys
 import textwrap
 
-import jax
-import numpy as np
-
 from repro.configs import get_config
 from repro.data.synthetic import serving_requests
 from repro.serve.engine import ServingEngine

@@ -7,9 +7,6 @@ from __future__ import annotations
 import os
 from typing import Any, Optional
 
-import jax
-import numpy as np
-
 from repro.core.ledger import Ledger, digest_bytes
 from repro.core.storage import StorageNetwork, deserialize_tree, serialize_tree
 

@@ -13,11 +13,9 @@ Two manipulation surfaces:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)

@@ -41,12 +41,13 @@ import numpy as np
 
 from repro.core import experts as ex
 from repro.core.attacks import AttackConfig, round_attack_mask, poison_tree
-from repro.core.consensus import ProofOfWork, majority_tree_vote
-from repro.core.ledger import Block, Ledger, digest_array, digest_tree
+from repro.core.consensus import ProofOfWork
+from repro.core.ledger import Ledger, digest_array, digest_tree
 from repro.core.reputation import ReputationConfig, ReputationLedger, WorkloadBalancer
 from repro.core.storage import StorageNetwork, serialize_tree
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.trust.audit import pack_audit_batch
 from repro.trust.commitments import chunk_bounds
 from repro.trust.protocol import OptimisticProtocol, TrustConfig
 
@@ -128,6 +129,19 @@ class BMoESystem:
                                                self.reputation)
             self._apply_one = (ex.mlp_expert_apply if cfg.expert_kind == "mlp"
                                else ex.cnn_expert_apply)
+            # one grouped jitted call recomputes every sampled (expert,
+            # chunk) pair of a round: the mlp bank routes through the
+            # audit kernel (Pallas on TPU, bit-identical gathered-vmap
+            # ref on CPU); other expert kinds use the generic gather
+            if cfg.expert_kind == "mlp":
+                self._batched_recompute_call = jax.jit(
+                    lambda bank, xd, idx, gid:
+                        kops.audit_mlp(bank, xd[idx], gid))
+            else:
+                def _gather_apply(bank, xd, idx, gid):
+                    p = jax.tree_util.tree_map(lambda a: a[gid], bank)
+                    return jax.vmap(self._apply_one)(p, xd[idx])
+                self._batched_recompute_call = jax.jit(_gather_apply)
         self._train_step = jax.jit(functools.partial(
             _train_step, cfg=cfg, apply_all=self._apply_all))
         self._infer_step = jax.jit(functools.partial(
@@ -334,6 +348,46 @@ class BMoESystem:
 
         return recompute
 
+    def _make_batched_recompute(self, experts, xin):
+        """Batched auditor recompute (``BatchRecomputeFn``): the same
+        fetch-by-CID semantics as ``_make_recompute`` — one storage
+        round-trip per sampled expert — but every sampled chunk of the
+        round is then recomputed in ONE jitted grouped call instead of a
+        Python-loop dispatch per (expert, slice).
+
+        The CID round-trip per sampled expert is preserved — and
+        ``StorageNetwork.get`` hash-verifies every replica against its
+        CID, so a fetched tree is guaranteed byte-identical to the
+        committed expert (a tampered replica is skipped or raises).
+        That guarantee is what lets the grouped call read the already-
+        device-resident bank and task directly: only the per-sample row
+        indices and expert ids cross the host boundary, the expert and
+        row gathers fuse into the kernel, the bank shape is constant,
+        and the only jit-retrace axis is the sample count, bucketed to
+        a multiple of 4.  Padding rows never reach the leaf hashes."""
+        fetched: set = set()
+        cids = self._audit_cids.setdefault(self.round, [])
+        xd = jnp.asarray(xin)
+
+        def fetch(e: int):
+            if e not in fetched:
+                p_e = jax.tree_util.tree_map(lambda a: a[e], experts)
+                cid = self.storage.put(serialize_tree(p_e))
+                self.storage.get(cid)      # raises unless a replica's
+                fetched.add(e)             # bytes hash back to the CID
+                cids.append(cid)
+
+        def batch_recompute(expert_ids, slices):
+            for e in sorted({int(e) for e in expert_ids}):
+                fetch(e)
+            idx, gid, n = pack_audit_batch(expert_ids, slices)
+            out = self._batched_recompute_call(experts, xd,
+                                               jnp.asarray(idx),
+                                               jnp.asarray(gid))
+            return np.asarray(out[:n])
+
+        return batch_recompute
+
     def _optimistic_round(self, x, y, atk, mask_e, rkey, executor, prev,
                           metrics, payload, gate_bias, active):
         """Commit -> optimistic accept -> audit -> (challenge -> court ->
@@ -358,7 +412,9 @@ class BMoESystem:
         payload["executor"] = executor
 
         proofs = self.protocol.run_audits(
-            self.round, self._make_recompute(prev[1], xin))
+            self.round, self._make_recompute(prev[1], xin),
+            self._make_batched_recompute(prev[1], xin)
+            if tc.audit_backend == "batched" else None)
         audited = sum(r.recomputed_leaves for r in state.reports)
         payload["audited_leaves"] = audited
         self.verify_stats["verify_evals"] += \
@@ -477,7 +533,6 @@ def _moe_forward(gate, experts, x, mask_e, key, noise_std, colluding, cfg,
                  apply_all, gate_bias=None, active=None, executor=0):
     """Shared forward: returns (trusted_out (B,C), weights (B,N),
     activation (N,), support (N,), flags (N,M))."""
-    B = x.shape[0]
     xin = x if cfg.expert_kind == "cnn" else _flatten_for_gate(x)
     logits = ex.gate_apply(gate, _flatten_for_gate(x))
     if gate_bias is not None:  # §VI-C workload-balance bias (loss-free)
@@ -504,7 +559,6 @@ def _moe_forward(gate, experts, x, mask_e, key, noise_std, colluding, cfg,
         flags = jnp.ones((cfg.num_experts, cfg.num_edges), jnp.int32)
     else:
         # redundancy: every edge publishes every expert's result
-        from repro.core.attacks import manipulate_outputs
         pub = jnp.broadcast_to(outs[:, None], (cfg.num_experts,
                                                cfg.num_edges) + outs.shape[1:])
         # colluding vs independent manipulation, traced under jit

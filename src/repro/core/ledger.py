@@ -11,7 +11,6 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
-import time
 from typing import Any, Dict, List, Optional
 
 import numpy as np

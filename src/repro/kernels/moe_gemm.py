@@ -8,8 +8,6 @@ scatter-dispatch in repro.models.moe.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

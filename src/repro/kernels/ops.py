@@ -11,12 +11,12 @@ Set REPRO_KERNEL_BACKEND to override the default.
 """
 from __future__ import annotations
 
-import functools
 import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import audit_gemm as _ag
 from repro.kernels import flash_attention as _fa
 from repro.kernels import moe_gemm as _mg
 from repro.kernels import redundancy_vote as _rv
@@ -72,6 +72,22 @@ def moe_gemm(buf, w, *, backend: str | None = None):
     if backend == "ref":
         return ref.moe_gemm_ref(buf, w)
     return _mg.moe_gemm(buf, w, interpret=(backend == "interpret"))
+
+
+# ------------------------------------------------------ batched audit
+def audit_mlp(params, x, gid, *, backend: str | None = None):
+    """Batched audit recompute: out[s] = mlp(params[gid[s]], x[s]).
+
+    params: stacked {w1,b1,w2,b2} over the expert axis; x: (S, C, d)
+    sampled chunks; gid: (S,) int32 expert per sample.  The ref backend
+    is bit-identical to the eager per-chunk expert apply (what leaf
+    digests are hashed from); the Pallas backend fuses both GEMMs and
+    the relu in VMEM (validated allclose in tests/test_kernels.py).
+    """
+    backend = backend or default_backend()
+    if backend == "ref":
+        return ref.audit_mlp_ref(params, x, gid)
+    return _ag.audit_mlp(params, x, gid, interpret=(backend == "interpret"))
 
 
 # ------------------------------------------------------ attention

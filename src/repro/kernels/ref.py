@@ -93,6 +93,25 @@ def moe_mlp_ref(buf, w_gate, w_up, w_down):
     return moe_gemm_ref(h.astype(buf.dtype), w_down)
 
 
+# ------------------------------------------------- batched audit recompute
+def audit_mlp_ref(params, x: jax.Array, gid: jax.Array) -> jax.Array:
+    """Grouped gather-MLP oracle: out[s] = mlp(params[gid[s]], x[s]).
+
+    params: stacked {w1 (E,d,h), b1 (E,h), w2 (E,h,o), b2 (E,o)};
+    x: (S, C, d); gid: (S,) int32.  This is bit-identical to applying
+    the per-expert MLP chunk-by-chunk (the eager audit oracle), which is
+    what lets the batched auditor reproduce the executor's leaf digests
+    exactly.
+    """
+    gathered = jax.tree_util.tree_map(lambda a: a[gid], params)
+
+    def one(p, xc):
+        h = jax.nn.relu(xc @ p["w1"] + p["b1"])
+        return h @ p["w2"] + p["b2"]
+
+    return jax.vmap(one)(gathered, x)
+
+
 # ------------------------------------------------- flash attention
 def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
     """Naive softmax attention oracle. q: (B,Sq,H,D), k/v: (B,Sk,KH,D)."""

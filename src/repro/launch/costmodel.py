@@ -12,7 +12,6 @@ N_active counts routed experts at k/E of their parameters (MoE).
 """
 from __future__ import annotations
 
-import dataclasses
 
 from repro.models.builder import count_params
 from repro.models.config import ModelConfig

@@ -75,7 +75,6 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             verbose: bool = True) -> dict:
     """Lower + compile one (arch, shape, mesh) combination; returns the
     roofline-input record."""
-    import jax.numpy as jnp
     from repro.configs import get_config
     from repro.launch import shapes as shp
     from repro.launch.mesh import make_production_mesh, make_trusted_mesh

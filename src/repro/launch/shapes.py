@@ -15,7 +15,7 @@ single token for decode.  ``applicable`` encodes the documented skips
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

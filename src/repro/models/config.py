@@ -9,7 +9,7 @@ is what keeps the 512-device dry-run compile tractable), plus an unrolled
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

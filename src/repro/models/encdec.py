@@ -15,7 +15,7 @@ from repro.models.builder import Leaf, stack
 from repro.models.config import ModelConfig
 from repro.models.layers import (attn_decl, attn_decode, attn_train,
                                  blockwise_attention, mlp_decl, rmsnorm,
-                                 rope, swiglu)
+                                 swiglu)
 
 
 def _enc_layer_decl(cfg):
@@ -139,7 +139,7 @@ def forward_decode(params, caches, tokens, pos, cfg: ModelConfig, *,
                    shard=None, unroll=False):
     """One decoder step against cached self-KV and precomputed cross-KV.
     tokens: (B, 1).  Returns (logits, new_caches)."""
-    from repro.models.layers import attn_qkv, decode_attention
+    from repro.models.layers import decode_attention
     B = tokens.shape[0]
     x = jnp.take(params["embed"], tokens, axis=0)
     hd = cfg.resolved_head_dim

@@ -6,9 +6,6 @@ O(S^2), which is what lets prefill_32k lower/compile within HBM.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

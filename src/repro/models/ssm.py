@@ -124,7 +124,6 @@ def ssm_decode(params, x, cache, cfg, shard=None):
     Returns (out (B,1,d), new_cache)."""
     B = x.shape[0]
     H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
-    W = cfg.ssm_conv_width
     xt = x[:, 0]
     z = xt @ params["wz"]
     pre = jnp.concatenate([xt @ params["wx"], xt @ params["wB"],

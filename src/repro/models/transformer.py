@@ -7,7 +7,6 @@ Parameters, KV-caches and inputs are all declared with
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

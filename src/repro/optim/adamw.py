@@ -3,7 +3,7 @@ exactly like the parameters)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -34,7 +34,7 @@ from repro.models.builder import materialize
 from repro.models.config import ModelConfig
 from repro.train.step import make_decode_step
 from repro.trust.audit import VerifierPool
-from repro.trust.commitments import MerkleTree, leaf_digest
+from repro.trust.commitments import MerkleTree, RoundCommitment, leaf_digest
 from repro.trust.protocol import ChallengeWindow, TrustConfig
 
 
@@ -58,8 +58,11 @@ class SlotState:
 
 
 def _tick_leaf(request_id: int, tick: int, token: int) -> str:
-    """Leaf digest of one committed engine tick."""
-    return leaf_digest(np.array([request_id, tick, token], np.int64))
+    """Leaf digest of one committed engine tick.  The (1, 3) row layout
+    matches ``RoundCommitment.leaf_chunk`` for a one-tick-per-leaf
+    commitment, so session audits run through the same batched
+    ``VerifierPool`` path as training audits."""
+    return leaf_digest(np.array([[request_id, tick, token]], np.int64))
 
 
 @dataclasses.dataclass
@@ -81,6 +84,21 @@ class SessionRecord:
     def seal(self) -> str:
         self.root = MerkleTree(self.leaves).root
         return self.root
+
+    def commitment(self) -> RoundCommitment:
+        """The sealed session as a RoundCommitment: one (pseudo-)expert,
+        one tick per leaf — what lets ``VerifierPool.audit_batched``
+        audit a serving session and a training round through one code
+        path.  ``claimed`` holds the *current* stream records; the
+        sealed ``leaf_digests`` are what they are checked against."""
+        t = len(self.leaves)
+        claimed = np.array(
+            [[[self.request_id, self.ticks[i], self.tokens[i]]
+              for i in range(t)]], np.int64)
+        return RoundCommitment(
+            round_id=self.request_id, executor=-1, root=self.root,
+            num_experts=1, chunks_per_expert=t, bounds=list(range(t + 1)),
+            leaf_digests=list(self.leaves), claimed=claimed)
 
 
 class ServingEngine:
@@ -247,28 +265,40 @@ class ServingEngine:
 
     # ------------------------------------------------ audits (verified)
     def audit_session(self, request_id: int, verifier: int = 0) -> Dict:
-        """Spot-check sampled leaves of a session commitment: each
-        sampled (tick, token) record is re-digested and its Merkle path
-        checked against the sealed root.  A mismatch (the served stream
-        was altered after commitment) revokes the request: it will never
-        finalize."""
+        """Spot-check sampled leaves of a session commitment through the
+        same batched auditor as training rounds: the sampled (tick,
+        token) records are re-digested in one ``leaf_digest_batch`` pass
+        and compared against the sealed leaves.  A mismatch (the served
+        stream was altered after commitment) revokes the request: it
+        will never finalize."""
         if not self.verified:
             raise ValueError("engine was not started with a TrustConfig")
         rec = self.records[request_id]
         if not rec.root:
             raise ValueError(f"request {request_id} not sealed yet")
+        com = rec.commitment()
+
+        def batch_recompute(experts, slices):
+            # honest recompute of a session leaf = re-encoding the served
+            # (tick, token) record; leaf i covers batch row i
+            rows = [[request_id, rec.ticks[sl.start], rec.tokens[sl.start]]
+                    for sl in slices]
+            return np.asarray(rows, np.int64)[:, None, :]
+
+        [report] = self._auditors.audit_batched(com, batch_recompute,
+                                                verifiers=[verifier])
+        sampled = report.sampled_leaves
+        mismatches = [p.leaf_index for p in report.fraud_proofs]
+        # Merkle-path check against the SEALED root: catches a consistent
+        # post-seal rewrite of both the record and its leaf digest, which
+        # the digest comparison alone (recompute vs current leaf list)
+        # cannot see
         tree = MerkleTree(rec.leaves)
-        sampled = self._auditors.sample_leaves(request_id, verifier,
-                                               len(rec.leaves))
-        mismatches = []
-        for leaf in sampled:
-            recomputed = _tick_leaf(request_id, rec.ticks[leaf],
-                                    rec.tokens[leaf])
-            ok = (recomputed == rec.leaves[leaf]
-                  and MerkleTree.verify(rec.root, recomputed,
-                                        tree.prove(leaf)))
-            if not ok:
-                mismatches.append(leaf)
+        if tree.root != rec.root:
+            mismatches = sorted(set(mismatches) | {
+                leaf for leaf in sampled
+                if not MerkleTree.verify(rec.root, rec.leaves[leaf],
+                                         tree.prove(leaf))})
         if mismatches:
             rec.revoked = True
             rec.finalized = False        # a revoked record is never final

@@ -12,7 +12,6 @@ against ShapeDtypeStructs for the multi-pod dry-run.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -31,17 +31,20 @@ Modules
   async challenge window -> finalize/rollback) gluing the above to the
   ledger.
 """
-from repro.trust.audit import (AuditReport, FraudProof, VerifierPool,
-                               verify_fraud_proof)
+from repro.trust.audit import (AuditPlan, AuditReport, BatchRecomputeFn,
+                               FraudProof, VerifierPool, verify_fraud_proof)
 from repro.trust.commitments import (MerklePath, MerkleTree, RoundCommitment,
-                                     commit_outputs, leaf_digest)
+                                     commit_outputs, leaf_digest,
+                                     leaf_digest_batch)
 from repro.trust.protocol import (OptimisticProtocol, RoundPhase, RoundState,
                                   TrustConfig)
 from repro.trust.slashing import DisputeCourt, StakeBook
 
 __all__ = [
-    "AuditReport", "FraudProof", "VerifierPool", "verify_fraud_proof",
+    "AuditPlan", "AuditReport", "BatchRecomputeFn", "FraudProof",
+    "VerifierPool", "verify_fraud_proof",
     "MerklePath", "MerkleTree", "RoundCommitment", "commit_outputs",
-    "leaf_digest", "OptimisticProtocol", "RoundPhase", "RoundState",
+    "leaf_digest", "leaf_digest_batch",
+    "OptimisticProtocol", "RoundPhase", "RoundState",
     "TrustConfig", "DisputeCourt", "StakeBook",
 ]

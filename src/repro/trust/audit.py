@@ -18,15 +18,46 @@ how audit-evasion scenarios are expressed.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.trust.commitments import (MerklePath, MerkleTree, RoundCommitment,
-                                     leaf_digest)
+                                     leaf_digest, leaf_digest_batch)
 
 # recompute_fn(expert_index, batch_slice) -> honest output chunk
 RecomputeFn = Callable[[int, slice], np.ndarray]
+
+# batch_recompute_fn(expert_indices, batch_slices) -> stacked honest
+# chunks (S, Cmax, ...): row s covers slices[s] of experts[s]'s output,
+# padded past the slice length (padding rows are never hashed).  One
+# call recomputes every sampled leaf of a round — the host backs it
+# with a single jitted grouped kernel instead of S eager dispatches.
+BatchRecomputeFn = Callable[[Sequence[int], Sequence[slice]], np.ndarray]
+
+
+def pack_audit_batch(expert_ids: Sequence[int], slices: Sequence[slice],
+                     bucket: int = 4):
+    """Pack a deduped (expert, slice) work list for a grouped recompute.
+
+    Returns ``(idx, gid, n)``: ``idx`` is ``(Sp, Cmax)`` int32 batch-row
+    indices per sample (rows past a slice's width point at row 0 — pure
+    padding, trimmed before hashing), ``gid`` the ``(Sp,)`` int32 expert
+    per sample, ``n`` the real sample count.  ``Sp`` buckets ``n`` up to
+    a multiple of ``bucket`` so a jitted consumer retraces O(1) times.
+    Shared by ``BMoESystem._make_batched_recompute`` and the
+    ``benchmarks/audit_kernels.py`` perf gate, so the benchmark measures
+    exactly the production packing.
+    """
+    n = len(expert_ids)
+    sp = -(-n // bucket) * bucket
+    cmax = max(sl.stop - sl.start for sl in slices)
+    idx = np.zeros((sp, cmax), np.int32)
+    gid = np.zeros(sp, np.int32)
+    for s, (e, sl) in enumerate(zip(expert_ids, slices)):
+        idx[s, :sl.stop - sl.start] = np.arange(sl.start, sl.stop)
+        gid[s] = int(e)
+    return idx, gid, n
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +75,27 @@ class FraudProof:
     def compact_size_bytes(self) -> int:
         """On-wire size: one chunk + log2(leaves) siblings (32B each)."""
         return self.claimed_chunk.nbytes + 32 * len(self.path.siblings)
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditPlan:
+    """Every verifier's lottery for one round, drawn up front.
+
+    ``unique_leaves`` dedupes across verifiers: a leaf sampled by three
+    non-lazy verifiers is recomputed once, not three times (each verifier
+    still gets the digest for its own report/fraud proof).  ``owner``
+    credits the recompute to the first non-lazy verifier that sampled the
+    leaf, so summed ``recomputed_leaves`` equals real recompute work.
+    """
+    round_id: int
+    sampled: Dict[int, List[int]]          # verifier -> sampled leaves
+    lazy: Dict[int, bool]
+    unique_leaves: List[int]               # deduped, ascending
+    owner: Dict[int, int]                  # leaf -> crediting verifier
+
+    @property
+    def num_recomputes(self) -> int:
+        return len(self.unique_leaves)
 
 
 @dataclasses.dataclass
@@ -145,6 +197,79 @@ class VerifierPool:
               verifiers: Optional[Sequence[int]] = None) -> List[AuditReport]:
         ids = range(self.num_verifiers) if verifiers is None else verifiers
         return [self.audit_one(commitment, recompute_fn, v) for v in ids]
+
+    # ------------------------------------------------------ batched path
+    def plan_audits(self, round_id: int, num_leaves: int,
+                    verifiers: Optional[Sequence[int]] = None) -> AuditPlan:
+        """Draw every verifier's lottery up front (same RNG streams as
+        ``audit_one``, so the plan is sample-for-sample identical to the
+        eager path) and dedupe the recompute work across verifiers."""
+        ids = list(range(self.num_verifiers) if verifiers is None
+                   else verifiers)
+        sampled = {v: self.sample_leaves(round_id, v, num_leaves)
+                   for v in ids}
+        lazy = {v: bool(self._rng(round_id, v, salt=1).random()
+                        < self.lazy_prob) for v in ids}
+        owner: Dict[int, int] = {}
+        for v in ids:                       # verifier order fixes ownership
+            if lazy[v]:
+                continue
+            for leaf in sampled[v]:
+                owner.setdefault(leaf, v)
+        return AuditPlan(round_id=round_id, sampled=sampled, lazy=lazy,
+                         unique_leaves=sorted(owner), owner=owner)
+
+    def audit_batched(self, commitment: RoundCommitment,
+                      batch_recompute_fn: BatchRecomputeFn,
+                      verifiers: Optional[Sequence[int]] = None
+                      ) -> List[AuditReport]:
+        """The whole pool's audit pass as ONE recompute call.
+
+        Plans all lotteries, gathers the deduped (expert, slice) work
+        list, recomputes it in a single ``batch_recompute_fn`` call, and
+        hashes every recomputed chunk in one ``leaf_digest_batch`` pass.
+        Per-verifier reports (sampled leaves, lazy flags, fraud proofs)
+        are identical to ``audit``'s; only ``recomputed_leaves`` differs —
+        it now counts real (deduped) recompute work, credited to the
+        first non-lazy sampler of each leaf.
+        """
+        plan = self.plan_audits(commitment.round_id, commitment.num_leaves,
+                                verifiers)
+        digest_of: Dict[int, str] = {}
+        if plan.unique_leaves:
+            coords = [commitment.leaf_coords(leaf)
+                      for leaf in plan.unique_leaves]
+            experts = [e for e, _, _ in coords]
+            slices = [sl for _, _, sl in coords]
+            stacked = np.asarray(batch_recompute_fn(experts, slices))
+            lengths = [sl.stop - sl.start for sl in slices]
+            digests = leaf_digest_batch(stacked, lengths)
+            digest_of = dict(zip(plan.unique_leaves, digests))
+        tree = None
+        reports = []
+        for v, leaves in plan.sampled.items():
+            report = AuditReport(round_id=commitment.round_id, verifier=v,
+                                 sampled_leaves=leaves, fraud_proofs=[],
+                                 lazy=plan.lazy[v])
+            reports.append(report)
+            if plan.lazy[v]:
+                continue
+            report.recomputed_leaves = sum(
+                1 for leaf in leaves if plan.owner.get(leaf) == v)
+            for leaf in leaves:
+                honest = digest_of[leaf]
+                claimed = commitment.leaf_digests[leaf]
+                if honest != claimed:
+                    if tree is None:
+                        tree = commitment.tree()
+                    e, _, _ = commitment.leaf_coords(leaf)
+                    report.fraud_proofs.append(FraudProof(
+                        round_id=commitment.round_id,
+                        executor=commitment.executor, leaf_index=leaf,
+                        expert=e, claimed_chunk=commitment.leaf_chunk(leaf),
+                        path=tree.prove(leaf), claimed_digest=claimed,
+                        recomputed_digest=honest, verifier=v))
+        return reports
 
     def detection_probability(self, corrupted_leaves: int,
                               honest_verifiers: Optional[int] = None) -> float:

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -28,6 +28,38 @@ def leaf_digest(chunk: np.ndarray) -> str:
     a = np.ascontiguousarray(chunk)
     return digest_bytes(b"leaf:" + a.tobytes() + str(a.shape).encode()
                         + str(a.dtype).encode())
+
+
+def leaf_digest_batch(chunks, lengths: Optional[Sequence[int]] = None
+                      ) -> List[str]:
+    """Digest every leaf of a stacked chunk batch in one pass.
+
+    ``chunks`` is ``(S, Cmax, *tail)``; row ``s`` covers the leaf's first
+    ``lengths[s]`` rows (``Cmax`` when ``lengths`` is None — the
+    equal-chunk fast path).  Rows past a leaf's length are padding and
+    never enter the hash.  Digests are byte-identical to
+    ``leaf_digest(chunks[s, :lengths[s]])``: one ``ascontiguousarray``
+    up front makes every leading-axis slice a contiguous view, so no
+    per-leaf canonicalization copies remain — this is the fused-hash
+    half of the batched audit pass, and what ``commit_outputs`` uses to
+    digest a whole round at once.
+    """
+    a = np.ascontiguousarray(chunks)
+    if a.ndim < 2:
+        raise ValueError(f"expected (S, Cmax, ...), got {a.shape}")
+    dt = str(a.dtype).encode()
+    if lengths is None:
+        shp = str(a.shape[1:]).encode()
+        return [digest_bytes(b"leaf:" + a[s].tobytes() + shp + dt)
+                for s in range(a.shape[0])]
+    if len(lengths) != a.shape[0]:
+        raise ValueError(f"{len(lengths)} lengths for {a.shape[0]} leaves")
+    out = []
+    for s, n in enumerate(lengths):
+        v = a[s, :n]
+        out.append(digest_bytes(b"leaf:" + v.tobytes()
+                                + str(v.shape).encode() + dt))
+    return out
 
 
 def _node_digest(left: str, right: str) -> str:
@@ -135,12 +167,22 @@ def commit_outputs(outputs, *, round_id: int, executor: int,
                    task_digest: str = "") -> RoundCommitment:
     """Build the executor's round commitment from its claimed per-expert
     outputs ``(N, B, C)``."""
-    claimed = np.asarray(outputs)
+    claimed = np.ascontiguousarray(outputs)
     n_experts, batch = claimed.shape[:2]
     bounds = chunk_bounds(batch, chunks_per_expert)
     chunks = len(bounds) - 1
-    digests = [leaf_digest(claimed[e, bounds[c]:bounds[c + 1]])
-               for e in range(n_experts) for c in range(chunks)]
+    widths = [bounds[c + 1] - bounds[c] for c in range(chunks)]
+    if len(set(widths)) == 1:
+        # equal chunks: digest the whole round through one reshaped view
+        # (leaf order is (e, c) row-major, exactly the reshape order)
+        digests = leaf_digest_batch(
+            claimed.reshape((n_experts * chunks, widths[0])
+                            + claimed.shape[2:]))
+    else:
+        per_chunk = [leaf_digest_batch(claimed[:, bounds[c]:bounds[c + 1]])
+                     for c in range(chunks)]
+        digests = [per_chunk[c][e]
+                   for e in range(n_experts) for c in range(chunks)]
     tree = MerkleTree(digests)
     return RoundCommitment(round_id=round_id, executor=executor,
                            root=tree.root, num_experts=n_experts,

@@ -20,13 +20,11 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Callable, Dict, List, Optional
-
-import numpy as np
+from typing import Dict, List, Optional
 
 from repro.core.reputation import ReputationLedger
-from repro.trust.audit import (AuditReport, FraudProof, RecomputeFn,
-                               VerifierPool, verify_fraud_proof)
+from repro.trust.audit import (AuditReport, BatchRecomputeFn, FraudProof,
+                               RecomputeFn, VerifierPool, verify_fraud_proof)
 from repro.trust.commitments import RoundCommitment, commit_outputs
 from repro.trust.slashing import (DisputeCourt, StakeBook, Verdict,
                                   reputation_fraud_update)
@@ -45,6 +43,9 @@ class TrustConfig:
     bounty_fraction: float = 0.5       # slashed amount paid to reporter
     min_stake: float = 0.25            # bond needed to execute
     lazy_verifier_prob: float = 0.0    # P[a verifier rubber-stamps]
+    audit_backend: str = "batched"     # batched (one grouped recompute
+    #                                    call/round) | eager (reference
+    #                                    oracle: one dispatch per leaf)
     seed: int = 0
 
 
@@ -117,15 +118,27 @@ class OptimisticProtocol:
         return state
 
     # ------------------------------------------------------------- audit
-    def run_audits(self, round_id: int,
-                   recompute_fn: RecomputeFn) -> List[FraudProof]:
+    def run_audits(self, round_id: int, recompute_fn: RecomputeFn,
+                   batch_recompute_fn: Optional[BatchRecomputeFn] = None
+                   ) -> List[FraudProof]:
         """All verifiers audit the round; raised proofs are court-checked
         against the committed root before they count (so a lying verifier
-        cannot grief with a fabricated proof)."""
+        cannot grief with a fabricated proof).
+
+        With ``batch_recompute_fn`` the pool audits through the batched
+        planner (``VerifierPool.audit_batched``): one grouped recompute
+        call for the whole round, deduped across verifiers.  The eager
+        ``recompute_fn`` is still used by the court to confirm raised
+        proofs — an independent recompute on the (rare) fraud path.
+        """
         state = self.rounds[round_id]
         if state.phase is not RoundPhase.ACCEPTED:
             return []                  # window already closed or resolved
-        reports = self.verifiers.audit(state.commitment, recompute_fn)
+        if batch_recompute_fn is not None:
+            reports = self.verifiers.audit_batched(state.commitment,
+                                                   batch_recompute_fn)
+        else:
+            reports = self.verifiers.audit(state.commitment, recompute_fn)
         state.reports.extend(reports)
         confirmed: List[FraudProof] = []
         for rep in reports:

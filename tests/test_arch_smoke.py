@@ -7,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config
-from repro.data.synthetic import lm_batches
 from repro.models import encdec
 from repro.models.builder import materialize
 from repro.models.transformer import cache_decl, forward_decode, forward_train, model_decl

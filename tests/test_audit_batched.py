@@ -1,0 +1,314 @@
+"""Equivalence and accounting tests for the batched audit engine.
+
+The batched path (``VerifierPool.plan_audits`` / ``audit_batched``, one
+grouped recompute call + one fused ``leaf_digest_batch`` pass per round)
+must be observationally identical to the eager per-chunk reference
+oracle (``audit_one``): same sampled leaves, same lazy coins, identical
+Merkle roots, byte-identical leaf digests, and field-identical fraud
+proofs — under honest, tampered, and lazy-verifier scenarios, including
+the padded-tail leaves of a non-divisible batch.  The one intended
+difference is ``recomputed_leaves``: the batched planner dedupes
+(expert, leaf) pairs across verifiers, so summed recompute counts real
+work (regression-pinned below).
+"""
+import numpy as np
+import pytest
+
+from repro.trust.audit import VerifierPool
+from repro.trust.commitments import (chunk_bounds, commit_outputs,
+                                     leaf_digest, leaf_digest_batch)
+
+
+def _batch_fn(honest):
+    """BatchRecomputeFn over a dense honest (N, B, C) tensor.  Padded
+    tail rows are NaN-poisoned: if any test digest matched one, padding
+    would have leaked into a hash."""
+    def fn(experts, slices):
+        cmax = max(sl.stop - sl.start for sl in slices)
+        out = np.full((len(experts), cmax) + honest.shape[2:], np.nan,
+                      honest.dtype)
+        for s, (e, sl) in enumerate(zip(experts, slices)):
+            out[s, :sl.stop - sl.start] = honest[e, sl]
+        return out
+    return fn
+
+
+def _assert_proofs_equal(got, want):
+    assert len(got) == len(want)
+    for p, q in zip(got, want):
+        assert (p.round_id, p.executor, p.leaf_index, p.expert,
+                p.claimed_digest, p.recomputed_digest, p.verifier) == \
+               (q.round_id, q.executor, q.leaf_index, q.expert,
+                q.claimed_digest, q.recomputed_digest, q.verifier)
+        assert p.path == q.path
+        np.testing.assert_array_equal(p.claimed_chunk, q.claimed_chunk)
+
+
+def _assert_reports_equivalent(batched, eager):
+    """Everything identical except the deduped recompute accounting."""
+    assert len(batched) == len(eager)
+    for b, e in zip(batched, eager):
+        assert (b.round_id, b.verifier, b.lazy) == \
+               (e.round_id, e.verifier, e.lazy)
+        assert b.sampled_leaves == e.sampled_leaves
+        _assert_proofs_equal(b.fraud_proofs, e.fraud_proofs)
+
+
+# ----------------------------------------------------- fused leaf hashing
+@pytest.mark.parametrize("dtype", [np.float32, np.float64, np.int64])
+def test_leaf_digest_batch_matches_leaf_digest(dtype):
+    rng = np.random.default_rng(0)
+    stack = rng.normal(size=(5, 7, 3)).astype(dtype)
+    assert leaf_digest_batch(stack) == [leaf_digest(stack[s])
+                                        for s in range(5)]
+    lengths = [7, 3, 1, 6, 7]
+    assert leaf_digest_batch(stack, lengths) == \
+        [leaf_digest(stack[s, :n]) for s, n in enumerate(lengths)]
+
+
+def test_leaf_digest_batch_rejects_bad_input():
+    with pytest.raises(ValueError):
+        leaf_digest_batch(np.zeros(4))
+    with pytest.raises(ValueError):
+        leaf_digest_batch(np.zeros((4, 2)), lengths=[1, 2])
+
+
+@pytest.mark.parametrize("batch,chunks", [(12, 4), (13, 4), (7, 3), (5, 8)])
+def test_commit_outputs_root_matches_manual_digests(batch, chunks):
+    """commit_outputs' batched hashing reproduces the per-leaf eager
+    digests (and so the root) for divisible AND ragged chunkings."""
+    rng = np.random.default_rng(1)
+    outs = rng.normal(size=(3, batch, 5)).astype(np.float32)
+    com = commit_outputs(outs, round_id=0, executor=1,
+                         chunks_per_expert=chunks)
+    bounds = chunk_bounds(batch, chunks)
+    manual = [leaf_digest(outs[e, bounds[c]:bounds[c + 1]])
+              for e in range(3) for c in range(len(bounds) - 1)]
+    assert com.leaf_digests == manual
+
+
+# ------------------------------------------------------ plan equivalence
+def test_plan_matches_eager_sampling_and_lazy_coins():
+    pool = VerifierPool(num_verifiers=4, audit_rate=0.3, lazy_prob=0.5,
+                        seed=7)
+    for round_id in range(5):
+        plan = pool.plan_audits(round_id, num_leaves=40)
+        for v in range(4):
+            assert plan.sampled[v] == pool.sample_leaves(round_id, v, 40)
+            assert plan.lazy[v] == bool(
+                pool._rng(round_id, v, salt=1).random() < pool.lazy_prob)
+        # unique leaves are exactly the non-lazy union, each owned by its
+        # first non-lazy sampler
+        union = sorted({leaf for v in range(4) if not plan.lazy[v]
+                        for leaf in plan.sampled[v]})
+        assert plan.unique_leaves == union
+        for leaf, owner in plan.owner.items():
+            assert not plan.lazy[owner] and leaf in plan.sampled[owner]
+            for v in range(owner):
+                assert plan.lazy[v] or leaf not in plan.sampled[v]
+
+
+# ------------------------------------------------- eager <-> batched
+@pytest.mark.parametrize("batch", [16, 13])   # divisible + padded tail
+def test_batched_matches_eager_honest(batch):
+    rng = np.random.default_rng(2)
+    honest = rng.normal(size=(4, batch, 3)).astype(np.float32)
+    com = commit_outputs(honest, round_id=3, executor=1, chunks_per_expert=4)
+    pool = VerifierPool(num_verifiers=3, audit_rate=0.5, seed=1)
+    eager = pool.audit(com, lambda e, sl: honest[e, sl])
+    batched = pool.audit_batched(com, _batch_fn(honest))
+    _assert_reports_equivalent(batched, eager)
+    assert all(r.clean for r in batched)
+
+
+@pytest.mark.parametrize("batch", [16, 13])
+def test_batched_matches_eager_tampered(batch):
+    """Corrupted leaves yield identical fraud proofs (index, expert,
+    digests, Merkle path, claimed chunk bytes, verifier) on both paths."""
+    rng = np.random.default_rng(3)
+    honest = rng.normal(size=(4, batch, 3)).astype(np.float32)
+    claimed = honest.copy()
+    claimed[2] += 1.0                                  # expert 2 corrupted
+    claimed[0, -1] += 0.5                              # tail leaf corrupted
+    com = commit_outputs(claimed, round_id=9, executor=0,
+                         chunks_per_expert=4)
+    pool = VerifierPool(num_verifiers=3, audit_rate=1.0, seed=2)
+    eager = pool.audit(com, lambda e, sl: honest[e, sl])
+    batched = pool.audit_batched(com, _batch_fn(honest))
+    _assert_reports_equivalent(batched, eager)
+    assert any(r.fraud_proofs for r in batched)
+    # the corrupted tail leaf of the ragged batch is among the catches
+    tail_leaf = 0 * com.chunks_per_expert + (com.chunks_per_expert - 1)
+    assert any(p.leaf_index == tail_leaf
+               for r in batched for p in r.fraud_proofs)
+
+
+def test_batched_lazy_verifiers_do_no_work():
+    rng = np.random.default_rng(4)
+    honest = rng.normal(size=(2, 8, 3)).astype(np.float32)
+    com = commit_outputs(honest + 5.0, round_id=0, executor=0,
+                         chunks_per_expert=2)          # everything corrupted
+    pool = VerifierPool(num_verifiers=4, audit_rate=1.0, lazy_prob=1.0,
+                        seed=0)
+    calls = []
+
+    def counting_fn(experts, slices):
+        calls.append(len(experts))
+        return _batch_fn(honest)(experts, slices)
+
+    reports = pool.audit_batched(com, counting_fn)
+    assert calls == []                     # all lazy: recompute never runs
+    assert all(r.lazy and r.clean and r.recomputed_leaves == 0
+               for r in reports)
+    _assert_reports_equivalent(reports,
+                               pool.audit(com, lambda e, sl: honest[e, sl]))
+
+
+def test_batched_is_one_recompute_call():
+    rng = np.random.default_rng(5)
+    honest = rng.normal(size=(4, 16, 3)).astype(np.float32)
+    com = commit_outputs(honest, round_id=1, executor=0, chunks_per_expert=4)
+    pool = VerifierPool(num_verifiers=3, audit_rate=1.0, seed=3)
+    calls = []
+
+    def counting_fn(experts, slices):
+        calls.append(len(experts))
+        return _batch_fn(honest)(experts, slices)
+
+    pool.audit_batched(com, counting_fn)
+    assert calls == [com.num_leaves]       # one call, fully deduped
+
+
+# -------------------------------------------------- dedupe accounting
+def test_recomputed_leaves_deduped_across_verifiers():
+    """Regression (the audit_one duplicate-recompute bug): at
+    audit_rate=1.0 every verifier samples every leaf; eager recompute
+    cost triples, the batched planner pays each leaf once and credits it
+    to the first non-lazy sampler."""
+    rng = np.random.default_rng(6)
+    honest = rng.normal(size=(3, 12, 2)).astype(np.float32)
+    com = commit_outputs(honest, round_id=0, executor=0, chunks_per_expert=3)
+    pool = VerifierPool(num_verifiers=3, audit_rate=1.0, seed=4)
+    eager = pool.audit(com, lambda e, sl: honest[e, sl])
+    batched = pool.audit_batched(com, _batch_fn(honest))
+    assert sum(r.recomputed_leaves for r in eager) == 3 * com.num_leaves
+    assert sum(r.recomputed_leaves for r in batched) == com.num_leaves
+    # verifier 0 samples first, so it owns every leaf here
+    assert [r.recomputed_leaves for r in batched] == [com.num_leaves, 0, 0]
+    # duplicate sampling still yields every verifier's own fraud proofs
+    bad = commit_outputs(honest + 1.0, round_id=0, executor=0,
+                         chunks_per_expert=3)
+    reports = pool.audit_batched(bad, _batch_fn(honest))
+    assert all(len(r.fraud_proofs) == bad.num_leaves for r in reports)
+
+
+def test_ownership_skips_lazy_verifiers():
+    pool = VerifierPool(num_verifiers=2, audit_rate=1.0, lazy_prob=0.5,
+                        seed=11)
+    # find a round where verifier 0 is lazy and verifier 1 is not
+    round_id = next(r for r in range(64)
+                    if pool._rng(r, 0, salt=1).random() < 0.5
+                    and not pool._rng(r, 1, salt=1).random() < 0.5)
+    plan = pool.plan_audits(round_id, num_leaves=10)
+    assert plan.lazy[0] and not plan.lazy[1]
+    assert plan.unique_leaves == plan.sampled[1]
+    assert all(v == 1 for v in plan.owner.values())
+
+
+# ------------------------------------------------ system-level wiring
+def test_bmoe_batched_and_eager_rounds_are_equivalent():
+    """End-to-end: optimistic training rounds under attack produce the
+    same commit roots, verdicts, rollbacks, and slashing events whether
+    audits run eagerly or through the batched engine — and the batched
+    engine's verify-compute ledger never exceeds the eager one."""
+    from repro.core.attacks import AttackConfig
+    from repro.core.bmoe import BMoEConfig, BMoESystem
+    from repro.core.reputation import ReputationConfig
+    from repro.data.synthetic import FMNIST, make_image_dataset
+    from repro.trust.protocol import TrustConfig
+
+    xtr, ytr, _, _ = make_image_dataset(FMNIST, n_train=600, n_test=100,
+                                        seed=0)
+    xtr = xtr.reshape(len(xtr), -1)
+    atk = AttackConfig(malicious_edges=(7, 8, 9), attack_prob=1.0,
+                       noise_std=5.0)
+
+    def run(backend):
+        cfg = BMoEConfig(
+            framework="optimistic", attack=atk, pow_difficulty=2,
+            reputation=ReputationConfig(init=0.5, gain=0.01, slash=0.4,
+                                        exclusion_threshold=0.2),
+            trust=TrustConfig(audit_rate=0.3, challenge_window=2,
+                              audit_backend=backend))
+        s = BMoESystem(cfg)
+        rng = np.random.default_rng(0)
+        for _ in range(6):
+            idx = rng.integers(0, len(xtr), 48)
+            s.train_round(xtr[idx], ytr[idx])
+        return s
+
+    eager, batched = run("eager"), run("batched")
+    pe = [b.payload for b in eager.ledger.blocks[1:]]
+    pb = [b.payload for b in batched.ledger.blocks[1:]]
+    for a, b in zip(pe, pb):
+        assert a["commit_root"] == b["commit_root"]
+        assert a.get("rolled_back") == b.get("rolled_back")
+        assert a.get("fraud_proofs") == b.get("fraud_proofs")
+        assert a["loss"] == b["loss"]
+    assert {ev.edge for ev in eager.protocol.stakes.events} == \
+           {ev.edge for ev in batched.protocol.stakes.events}
+    assert batched.verify_stats["verify_evals"] <= \
+        eager.verify_stats["verify_evals"]
+
+
+def test_serving_audit_catches_consistent_leaf_rewrite():
+    """Regression: rewriting BOTH a session record and its leaf digest
+    consistently defeats the digest comparison (recompute matches the
+    rewritten leaf) — only the Merkle-path check against the SEALED root
+    catches it.  The batched audit_session must keep that check."""
+    from repro.serve.engine import _tick_leaf
+    from repro.trust.protocol import TrustConfig
+
+    eng = _make_sealed_engine(
+        TrustConfig(audit_rate=1.0, num_verifiers=1, challenge_window=3))
+    rid = next(iter(eng.records))
+    rec = eng.records[rid]
+    leaf = len(rec.tokens) // 2
+    rec.tokens[leaf] ^= 1                       # rewrite the record...
+    rec.leaves[leaf] = _tick_leaf(rid, rec.ticks[leaf],
+                                  rec.tokens[leaf])   # ...and its digest
+    rep = eng.audit_session(rid)
+    assert leaf in rep["mismatches"] and rep["revoked"]
+    assert rid not in eng.completed
+
+
+def _make_sealed_engine(trust):
+    from repro.configs import get_config
+    from repro.data.synthetic import serving_requests
+    from repro.serve.engine import ServingEngine
+    from repro.train.loop import init_model
+
+    cfg = get_config("smollm-360m", smoke=True)
+    eng = ServingEngine(cfg, init_model(cfg, seed=0), batch_slots=2,
+                        cache_len=64, trust=trust)
+    eng.submit(list(serving_requests(cfg.vocab_size, 2, max_prompt=6,
+                                     max_new=6, seed=3)))
+    eng.run()
+    return eng
+
+
+def test_serving_session_commitment_roundtrip():
+    """A sealed session's RoundCommitment view reproduces its leaves, so
+    the shared batched auditor checks serving sessions too."""
+    from repro.serve.engine import SessionRecord, _tick_leaf
+
+    rec = SessionRecord(request_id=5)
+    for tick, token in [(3, 11), (4, 7), (6, 2)]:
+        rec.append(tick, token)
+    rec.seal()
+    com = rec.commitment()
+    assert com.num_leaves == 3 and com.root == rec.root
+    for i in range(3):
+        assert com.leaf_digests[i] == rec.leaves[i]
+        assert leaf_digest(com.leaf_chunk(i)) == \
+            _tick_leaf(5, rec.ticks[i], rec.tokens[i])

@@ -6,7 +6,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.consensus import ProofOfWork, majority_tree_vote, majority_vote
 from repro.core.contracts import ContractEngine
-from repro.core.ledger import Block, Ledger, digest_array, digest_tree
+from repro.core.ledger import Block, Ledger, digest_tree
 from repro.core.storage import StorageNetwork, deserialize_tree, serialize_tree
 
 

@@ -1,10 +1,6 @@
 """Multi-device tests (subprocess with virtual CPU devices): sharding
 rules, trusted-MoE consensus under attack, small-mesh lower/compile, and
 the hloanalysis loop correction."""
-import json
-
-import pytest
-
 from conftest import run_with_devices
 
 

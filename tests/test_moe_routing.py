@@ -1,6 +1,5 @@
 """Property tests (hypothesis) for the MoE router invariants."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 

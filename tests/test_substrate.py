@@ -1,7 +1,5 @@
 """Substrate tests: optimizer, data pipeline, checkpointing, serving
 engine, builder, attacks."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -104,9 +102,9 @@ def test_lm_batches_structured():
     assert b["tokens"].shape == (4, 32)
     # fully structured: labels are a fixed permutation of tokens
     t = np.asarray(b["tokens"])
-    l = np.asarray(b["labels"])
+    lab = np.asarray(b["labels"])
     mapping = {}
-    for a, bb in zip(t.ravel(), l.ravel()):
+    for a, bb in zip(t.ravel(), lab.ravel()):
         assert mapping.setdefault(int(a), int(bb)) == int(bb)
 
 

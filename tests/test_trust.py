@@ -370,7 +370,6 @@ def test_ledger_integrity_with_audit_blocks(data):
 
 # -------------------------------------------------- serving integration
 def _tiny_engine(**kw):
-    import jax
     from repro.configs import get_config
     from repro.serve.engine import ServingEngine
     from repro.train.loop import init_model
