@@ -1,0 +1,67 @@
+"""Pipelined optimistic rounds: commit-and-continue training with
+asynchronous challenge windows, chained rollback on late-confirmed
+fraud, and the same pipeline at batch-inference granularity.
+
+The system commits round r and immediately proceeds to rounds
+r+1..r+w on the optimistically-accepted state; audits park in a
+deadline-ordered queue and drain in merged bursts (one grouped kernel
+call per backlog).  When a fraud proof lands for round r AFTER its
+descendants committed, the whole chain rolls back: snapshot restored,
+descendants invalidated, every voided round re-executed honestly,
+exactly one slash for the convicted round — all recorded as rollback
+blocks in the ledger.
+
+Run:  PYTHONPATH=src python examples/pipelined_rounds.py
+"""
+import numpy as np
+
+from repro.core.attacks import AttackConfig
+from repro.core.bmoe import BMoEConfig, BMoESystem
+from repro.data.synthetic import FMNIST, make_image_dataset
+from repro.trust.protocol import RoundPhase, TrustConfig
+
+xtr, ytr, xte, yte = make_image_dataset(FMNIST, n_train=4000, n_test=800)
+xtr, xte = xtr.reshape(len(xtr), -1), xte.reshape(len(xte), -1)
+
+attack = AttackConfig(malicious_edges=(2,), attack_prob=1.0, noise_std=5.0)
+system = BMoESystem(BMoEConfig(
+    framework="optimistic", attack=attack, pow_difficulty=4,
+    trust=TrustConfig(audit_rate=0.3, challenge_window=3,
+                      scheduling="pipelined")))
+
+print("=== pipelined optimistic training (window=3, malicious edge 2) ===")
+rng = np.random.default_rng(0)
+for r in range(12):
+    idx = rng.integers(0, len(xtr), 256)
+    m = system.train_round(xtr[idx], ytr[idx])
+    backlog = system.protocol.audit_backlog()
+    flag = " <- ROLLED BACK + chain replayed" if m["rolled_back"] else ""
+    print(f"  round {r:2d} loss={float(m['loss']):.3f} "
+          f"audit_backlog={backlog}{flag}")
+
+system.flush_trust()
+stats = system.protocol.stats
+print(f"\nprotocol: {stats['committed']} committed, "
+      f"{stats['finalized']} finalized, {stats['rolled_back']} rolled back, "
+      f"{stats['invalidated']} invalidated (chain descendants), "
+      f"{stats['audit_drains']} audit drains")
+for rb in system.ledger.rollbacks():
+    p = rb.payload
+    print(f"rollback block: round {p['rollback_of']} convicted "
+          f"(executor {p['executor']} slashed), voided chain {p['chain']}")
+phases = {rid: st.phase.value for rid, st in system.protocol.rounds.items()
+          if st.phase in (RoundPhase.ROLLED_BACK, RoundPhase.INVALIDATED)}
+print(f"voided rounds: {phases}")
+print(f"chain verifies: {system.ledger.verify_chain()}")
+acc = system.evaluate(xte, yte, attack=AttackConfig())
+print(f"clean accuracy after rollbacks: {acc:.3f}")
+
+print("\n=== batch-inference pipeline (same protocol, frozen weights) ===")
+for _ in range(3):
+    logits, _, _ = system.infer(xte[:128], attack=AttackConfig())
+    commit = [e for e in system.infer_log if e["event"] == "commit"][-1]
+    print(f"  infer round {commit['round']}: committed "
+          f"{commit['root']}..., pending={system.pending_inference()}")
+system.flush_trust()
+print(f"inference settled: pending={system.pending_inference()}, "
+      f"log events={[e['event'] for e in system.infer_log]}")

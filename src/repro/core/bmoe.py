@@ -47,9 +47,11 @@ from repro.core.reputation import ReputationConfig, ReputationLedger, WorkloadBa
 from repro.core.storage import StorageNetwork, serialize_tree
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
-from repro.trust.audit import pack_audit_batch
+from repro.trust.audit import pack_audit_batch, pack_audit_batch_multi
 from repro.trust.commitments import chunk_bounds
-from repro.trust.protocol import OptimisticProtocol, TrustConfig
+from repro.trust.protocol import (TERMINAL_PHASES, AuditJob,
+                                  OptimisticProtocol, RoundPhase,
+                                  TrustConfig)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,8 +114,29 @@ class BMoESystem:
         # audit evidence CIDs per optimistic round, pruned from storage
         # once the round's challenge window closes (data-availability)
         self._audit_cids: Dict[int, List[str]] = {}
+        # pipelined-scheduling state: per-pending-round snapshots (the
+        # (gate, experts) the executor was handed, the task, and the keys
+        # needed to replay the round honestly after a chained rollback)
+        self._round_ctx: Dict[int, Dict] = {}
+        # batch-inference pipeline (lazily created on the first optimistic
+        # infer): its own round clock, shared stakes/court/reputation
+        self._infer_protocol: Optional[OptimisticProtocol] = None
+        self._infer_round = 0
+        self._infer_ctx: Dict[int, Dict] = {}
+        self._infer_audit_cids: Dict[int, List[str]] = {}
+        self.infer_log: List[Dict] = []
+        # "audit" collects verifier recompute/hash/fetch seconds drained
+        # under pipelined scheduling: work that deployment runs on the
+        # verifier pool concurrently with later rounds, i.e. OFF the
+        # round loop's critical path (the simulation executes it inline,
+        # so it is measured separately rather than folded into
+        # consensus).  Synchronous scheduling keeps audits on the
+        # critical path, inside "consensus".
+        # "audit_infer" keeps the inference pipeline's drains out of the
+        # per-training-round latency decomposition
         self._timers: Dict[str, float] = {"compute": 0.0, "consensus": 0.0,
-                                          "chain": 0.0}
+                                          "chain": 0.0, "audit": 0.0,
+                                          "audit_infer": 0.0}
         # verification-compute ledger, in units of (expert evaluations x
         # samples): base = the one canonical execution, verify = recompute
         # done purely to check it (redundant copies / audits), escalate =
@@ -199,12 +222,16 @@ class BMoESystem:
             self._mine(payload)
             self._timers["chain"] += time.perf_counter() - t0
         elif cfg.framework == "optimistic":
-            # commit -> optimistic accept -> audit -> maybe rollback
+            # commit -> optimistic accept -> async audit -> maybe rollback
+            # (audit seconds drained off-path land in _timers["audit"],
+            # not in the critical-path consensus time)
             t0 = time.perf_counter()
+            a0 = self._timers["audit"]
             metrics = self._optimistic_round(
                 x, y, atk, mask_e, rkey, executor, prev, metrics, payload,
                 gate_bias, active)
-            self._timers["consensus"] += time.perf_counter() - t0
+            self._timers["consensus"] += (time.perf_counter() - t0
+                                          - (self._timers["audit"] - a0))
             payload["loss"] = float(metrics["loss"])
             t0 = time.perf_counter()
             self._mine(payload)
@@ -215,36 +242,104 @@ class BMoESystem:
         self.round += 1
         return metrics
 
-    def infer(self, x, *, attack: Optional[AttackConfig] = None):
+    def infer(self, x, *, attack: Optional[AttackConfig] = None,
+              commit: bool = True):
         """Steps 1-3 (+6): forward only, no updates (paper: 4-5 skipped).
 
-        Under ``framework="optimistic"`` the returned logits are the
-        *finalized* view: committed results are only consumed after their
-        challenge window, and a detected-fraud round is replaced by the
-        court's recompute, so the post-finalization output is the honest
-        one (full-tensor corruption is caught w.p. 1-(1-audit_rate)^k
-        ~= 1).  The per-tick commit/finalize protocol for streaming
-        inference lives in ``ServingEngine`` verified sessions.
+        Under ``framework="optimistic"`` batch inference runs through the
+        same commit-challenge-audit pipeline as training rounds, at batch
+        granularity: a rotating executor's claimed per-expert outputs are
+        Merkle-committed, the logits are returned immediately (the
+        optimistic view), and the audit drains off the critical path on a
+        separate inference round clock (shared stake book/court — an
+        inference conviction slashes and excludes the executor from BOTH
+        rotations).  ``pending_inference()`` lists rounds still inside
+        their window; ``infer_log`` records commits/revocations;
+        ``flush_trust()`` settles everything.  A corrupted round is
+        caught w.p. 1-(1-audit_rate)^k ~= 1 for full-tensor corruption.
+
+        ``commit=False`` is a side-effect-free probe of the finalized
+        (honest) view: no commitment, no audit round, no shared-state
+        mutation — what ``evaluate`` uses, so measuring accuracy never
+        perturbs the trust experiment.  The per-tick protocol for
+        streaming inference lives in ``ServingEngine`` verified
+        sessions.
         """
         cfg = self.cfg
         atk = attack if attack is not None else cfg.attack
         rkey = jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 91),
                                   self.round + 1_000_000)
-        mask_e = round_attack_mask(atk, cfg.num_edges, rkey)
-        if cfg.framework == "optimistic":
-            mask_e = jnp.zeros_like(mask_e)
         gate_bias, active = self._controls()
+        if cfg.framework != "optimistic" or not commit:
+            # non-optimistic frameworks serve their (possibly attacked)
+            # consensus view; the optimistic probe serves the finalized
+            # honest view (corruption would be audited out anyway)
+            mask_e = (round_attack_mask(atk, cfg.num_edges, rkey)
+                      if cfg.framework != "optimistic"
+                      else jnp.zeros(cfg.num_edges, jnp.float32))
+            logits, activation, support = self._infer_step(
+                self.gate, self.experts, x, mask_e,
+                jax.random.fold_in(rkey, 1), atk.noise_std,
+                jnp.asarray(atk.colluding), gate_bias, active, jnp.int32(0))
+            return (np.asarray(logits), np.asarray(activation),
+                    np.asarray(support))
+
+        proto = self._ensure_infer_protocol()
+        rid = self._infer_round
+        self._infer_round += 1
+        # each inference round draws its own attack lottery — without
+        # folding in rid, back-to-back infer() calls would replay one
+        # perfectly correlated mask and void the per-round-independent
+        # detection bound
+        rkey = jax.random.fold_in(rkey, rid)
+        mask_e = round_attack_mask(atk, cfg.num_edges, rkey)
+        executor = proto.pick_executor(rid)
         logits, activation, support = self._infer_step(
             self.gate, self.experts, x, mask_e, jax.random.fold_in(rkey, 1),
             atk.noise_std, jnp.asarray(atk.colluding), gate_bias, active,
-            jnp.int32(0))
+            jnp.int32(executor))
+        xin = np.asarray(x if cfg.expert_kind == "cnn"
+                         else np.asarray(x).reshape(len(x), -1))
+        tc = self.trust_cfg
+        bounds = chunk_bounds(xin.shape[0], tc.chunks_per_expert)
+        honest = self._eager_outputs(self.experts, xin, bounds)
+        attacked = bool(np.asarray(mask_e)[executor] > 0)
+        state = self._commit_round(proto, rid, executor, honest, attacked,
+                                   atk, 1_000_000 + rid,
+                                   digest_array(xin[:8]))
+        self._infer_ctx[rid] = {
+            "prev": (self.gate, self.experts), "xin": xin, "honest": honest,
+            "executor": executor, "mask_e": np.asarray(mask_e), "atk": atk,
+            "active": active,
+        }
+        cids = self._infer_audit_cids.setdefault(rid, [])
+        recompute_fn = self._make_recompute(self.experts, xin, cids)
+        batch_fn = (self._make_batched_recompute(self.experts, xin, cids)
+                    if tc.audit_backend == "batched" else None)
+        proto.schedule_audit(rid, recompute_fn, batch_fn)
+        self.infer_log.append({"event": "commit", "round": rid,
+                               "executor": executor,
+                               "root": state.commitment.root[:16]})
+
+        drain_now = None if tc.scheduling == "synchronous" else rid
+        summary = self._drain_trust(proto, self._infer_ctx,
+                                    self._infer_audit_cids, drain_now,
+                                    "infer")
+        self._record_infer_verdicts(summary)
+        for frid in proto.advance(rid):
+            self.infer_log.append({"event": "finalize", "round": frid})
+        self._prune_closed_rounds(proto, self._infer_ctx,
+                                  self._infer_audit_cids)
         return np.asarray(logits), np.asarray(activation), np.asarray(support)
 
     def evaluate(self, x, y, *, attack: Optional[AttackConfig] = None,
                  batch: int = 1000) -> float:
         correct = 0
         for i in range(0, len(x), batch):
-            logits, _, _ = self.infer(x[i:i + batch], attack=attack)
+            # commit=False: an accuracy probe must not mint inference
+            # rounds, pay commitments, or slash anyone
+            logits, _, _ = self.infer(x[i:i + batch], attack=attack,
+                                      commit=False)
             correct += int((logits.argmax(-1) == np.asarray(y[i:i + batch])).sum())
         return correct / len(x)
 
@@ -312,19 +407,38 @@ class BMoESystem:
     # ------------------------------------------- optimistic verification
     def _eager_outputs(self, experts, xin, bounds):
         """The executor's commitment-building pass: every expert's output
-        computed chunk-by-chunk through the same per-expert apply the
-        auditors use, so honest leaves recompute bit-identically."""
+        computed through the same recompute path the auditors use, so
+        honest leaves recompute bit-identically.  For the mlp bank every
+        (expert, chunk) leaf goes through ONE grouped ``audit_mlp`` call
+        (the auditors' own kernel); other expert kinds fall back to the
+        per-expert chunked apply."""
         cfg = self.cfg
+        n_chunks = len(bounds) - 1
+        if cfg.expert_kind == "mlp" and self.protocol is not None:
+            slices = [slice(bounds[c], bounds[c + 1])
+                      for c in range(n_chunks)]
+            work = [(e, sl) for e in range(cfg.num_experts)
+                    for sl in slices]            # (e, c) row-major = leaf order
+            idx, gid, n = pack_audit_batch([e for e, _ in work],
+                                           [sl for _, sl in work])
+            out = np.asarray(self._batched_recompute_call(
+                experts, jnp.asarray(xin), jnp.asarray(idx),
+                jnp.asarray(gid)))[:n]
+            parts = [np.concatenate(
+                [out[e * n_chunks + c][:bounds[c + 1] - bounds[c]]
+                 for c in range(n_chunks)], axis=0)
+                for e in range(cfg.num_experts)]
+            return np.stack(parts)
         parts = []
         for e in range(cfg.num_experts):
             p_e = jax.tree_util.tree_map(lambda a: a[e], experts)
             chunks = [np.asarray(self._apply_one(
                 p_e, jnp.asarray(xin[bounds[c]:bounds[c + 1]])))
-                for c in range(len(bounds) - 1)]
+                for c in range(n_chunks)]
             parts.append(np.concatenate(chunks, axis=0))
         return np.stack(parts)
 
-    def _make_recompute(self, experts, xin):
+    def _make_recompute(self, experts, xin, cids: List[str]):
         """Auditor-side recompute: fetch the sampled expert from the
         storage layer by CID (content-addressed, so a tampered replica is
         self-evident) and recompute the audited chunk on the published
@@ -336,7 +450,6 @@ class BMoESystem:
         a court verdict resolves it (the compact fraud proofs remain in
         the round state)."""
         cache: Dict[int, object] = {}
-        cids = self._audit_cids.setdefault(self.round, [])
 
         def recompute(e: int, sl: slice):
             if e not in cache:
@@ -348,7 +461,7 @@ class BMoESystem:
 
         return recompute
 
-    def _make_batched_recompute(self, experts, xin):
+    def _make_batched_recompute(self, experts, xin, cids: List[str]):
         """Batched auditor recompute (``BatchRecomputeFn``): the same
         fetch-by-CID semantics as ``_make_recompute`` — one storage
         round-trip per sampled expert — but every sampled chunk of the
@@ -364,10 +477,14 @@ class BMoESystem:
         indices and expert ids cross the host boundary, the expert and
         row gathers fuse into the kernel, the bank shape is constant,
         and the only jit-retrace axis is the sample count, bucketed to
-        a multiple of 4.  Padding rows never reach the leaf hashes."""
+        a multiple of 4.  Padding rows never reach the leaf hashes.
+
+        The task transfer is deferred to the first call: under pipelined
+        scheduling the host drains through the cross-round merged path
+        (``_audit_jobs_merged``) and this closure is only the fallback
+        for per-round drains, so building it must cost nothing."""
         fetched: set = set()
-        cids = self._audit_cids.setdefault(self.round, [])
-        xd = jnp.asarray(xin)
+        xd_cache: List = []
 
         def fetch(e: int):
             if e not in fetched:
@@ -380,20 +497,247 @@ class BMoESystem:
         def batch_recompute(expert_ids, slices):
             for e in sorted({int(e) for e in expert_ids}):
                 fetch(e)
+            if not xd_cache:
+                xd_cache.append(jnp.asarray(xin))
             idx, gid, n = pack_audit_batch(expert_ids, slices)
-            out = self._batched_recompute_call(experts, xd,
+            out = self._batched_recompute_call(experts, xd_cache[0],
                                                jnp.asarray(idx),
                                                jnp.asarray(gid))
             return np.asarray(out[:n])
 
         return batch_recompute
 
+    def _commit_round(self, protocol, rid, executor, honest, attacked, atk,
+                      seed_salt, task_digest):
+        """Build the executor's claimed tensor (corrupted iff it attacks)
+        and publish the round commitment."""
+        claimed = honest
+        if attacked:
+            rng = np.random.default_rng(self.cfg.seed * 7919 + seed_salt)
+            claimed = honest + atk.noise_std * rng.standard_normal(
+                honest.shape).astype(honest.dtype)
+        return protocol.commit(rid, executor, claimed,
+                               task_digest=task_digest)
+
+    def _court_publish(self, ctx, claimed, seed_salt):
+        """The dispute court's input: every edge's copy of every expert's
+        result — the paper's full redundancy matrix, reconstructed from
+        the round snapshot and its attack pattern."""
+        cfg = self.cfg
+        honest, atk = ctx["honest"], ctx["atk"]
+        pub = np.broadcast_to(
+            honest[:, None],
+            (cfg.num_experts, cfg.num_edges) + honest.shape[1:]).copy()
+        att = np.asarray(ctx["mask_e"]) > 0
+        if atk.colluding:
+            pub[:, att] = claimed[:, None]     # coalition backs the executor
+        else:
+            rng = np.random.default_rng(cfg.seed * 104729 + seed_salt)
+            for m in np.nonzero(att)[0]:
+                pub[:, m] = honest + atk.noise_std * rng.standard_normal(
+                    honest.shape).astype(honest.dtype)
+        pub[:, ctx["executor"]] = claimed
+        return pub
+
+    def _audit_jobs_merged(self, protocol, ctx_store, jobs: List[AuditJob],
+                           cid_store: Dict[int, List[str]]):
+        """Audit a whole drained backlog through ONE grouped kernel call:
+        the per-round expert-bank snapshots stack to ``(R*N, ...)``, the
+        per-round tasks concatenate row-wise, and
+        ``VerifierPool.audit_rounds`` fuses every sampled leaf of every
+        drained round into a single recompute + one hash pass.  The
+        fetch-by-CID data-availability contract is kept per
+        (round, sampled expert)."""
+        cfg = self.cfg
+        ctxs = [ctx_store[j.round_id] for j in jobs]
+        coms = [protocol.rounds[j.round_id].commitment for j in jobs]
+        banks = [c["prev"][1] for c in ctxs]
+        xins = [c["xin"] for c in ctxs]
+        # pad multi-round drains to a FIXED (window+1)-slot layout —
+        # constant stacked shapes, so the grouped kernel compiles once
+        # per batch size instead of once per backlog size (padding slots
+        # repeat round 0's bank and contribute zero task rows; no sample
+        # ever indexes them).  Single-round drains keep the unpadded
+        # per-round layout the synchronous scheduler always uses.
+        slots = (self.trust_cfg.challenge_window + 1 if len(jobs) > 1
+                 else 1)
+        slots = max(slots, len(jobs))
+        bmax = max(len(x) for x in xins)
+        row_off = np.arange(slots + 1) * bmax
+        pad_banks = banks + [banks[0]] * (slots - len(banks))
+        stacked_bank = jax.tree_util.tree_map(
+            lambda *ls: jnp.concatenate([jnp.asarray(a) for a in ls], 0),
+            *pad_banks)
+        xpad = np.zeros((slots * bmax,) + xins[0].shape[1:],
+                        xins[0].dtype)
+        for k, x in enumerate(xins):
+            xpad[k * bmax:k * bmax + len(x)] = x
+        xcat = jnp.asarray(xpad)
+        fetched: set = set()
+
+        def fetch(k: int, e: int):
+            if (k, e) in fetched:
+                return
+            p_e = jax.tree_util.tree_map(lambda a: a[e], banks[k])
+            cid = self.storage.put(serialize_tree(p_e))
+            self.storage.get(cid)          # raises unless a replica's
+            fetched.add((k, e))            # bytes hash back to the CID
+            cid_store.setdefault(jobs[k].round_id, []).append(cid)
+
+        def multi_fn(slot_ids, experts, slices):
+            for k, e in sorted({(int(k), int(e))
+                                for k, e in zip(slot_ids, experts)}):
+                fetch(k, e)
+            # merged drains carry more (and more variable) samples than a
+            # per-round audit: bucket to the next power of two so the
+            # grouped call settles on O(1) compiled shapes
+            bucket = 8
+            while bucket < len(experts):
+                bucket *= 2
+            idx, gid, n = pack_audit_batch_multi(slot_ids, experts, slices,
+                                                 row_off, cfg.num_experts,
+                                                 bucket=bucket)
+            out = self._batched_recompute_call(stacked_bank, xcat,
+                                               jnp.asarray(idx),
+                                               jnp.asarray(gid))
+            return np.asarray(out[:n])
+
+        return protocol.verifiers.audit_rounds(coms, multi_fn)
+
+    def _drain_trust(self, protocol, ctx_store, cid_store, now,
+                     domain: str) -> Dict:
+        """Drain the deferred-audit backlog: run every queued audit (one
+        merged grouped call under the batched backend), court-resolve the
+        challenged rounds in round order, and — for the training domain —
+        roll back the whole optimistic chain built on a convicted round
+        (restore the pre-fraud snapshot, re-execute every voided round
+        honestly).  Emits one rollback block per conviction."""
+        cfg, tc = self.cfg, self.trust_cfg
+        jobs = protocol.pop_audit_jobs(now)
+        summary: Dict = {"drained": [j.round_id for j in jobs],
+                         "audited_leaves": 0, "fraud_proofs": 0,
+                         "convicted": [], "slashed": [],
+                         "replayed_metrics": None}
+        if not jobs:
+            return summary
+        t0 = time.perf_counter()
+        if tc.audit_backend == "batched":
+            reports_by_rid = self._audit_jobs_merged(protocol, ctx_store,
+                                                     jobs, cid_store)
+        else:
+            reports_by_rid = {
+                j.round_id: protocol.verifiers.audit(
+                    protocol.rounds[j.round_id].commitment, j.recompute_fn)
+                for j in jobs}
+        for job in jobs:
+            reports = reports_by_rid[job.round_id]
+            protocol.apply_reports(job.round_id, reports, job.recompute_fn)
+            audited = sum(r.recomputed_leaves for r in reports)
+            batch_r = len(ctx_store[job.round_id]["xin"])
+            chunks = protocol.rounds[job.round_id].commitment.chunks_per_expert
+            summary["audited_leaves"] += audited
+            self.verify_stats["verify_evals"] += \
+                audited * batch_r / max(chunks, 1)
+        if tc.scheduling == "pipelined":
+            # verifier-pool work: concurrent with later rounds in
+            # deployment, so off the critical path (courts + chain
+            # replay below stay on it — state must be settled)
+            key = "audit" if domain == "train" else "audit_infer"
+            self._timers[key] += time.perf_counter() - t0
+
+        # courts fire in round order, so an early conviction invalidates
+        # ACCEPTED descendants before their (clean) audits can finalize
+        # them, while CHALLENGED descendants still get their own verdict
+        n_rollbacks = len(protocol.rollbacks)
+        # the stake book is shared across the train/infer protocols and
+        # their round-id namespaces overlap — attribute slashes by the
+        # events this drain books, never by round-id lookup
+        n_events = len(protocol.stakes.events)
+        challenged = sorted(
+            j.round_id for j in jobs
+            if protocol.rounds[j.round_id].phase is RoundPhase.CHALLENGED)
+        for rid in challenged:
+            state = protocol.rounds[rid]
+            if state.phase is not RoundPhase.CHALLENGED:
+                continue
+            ctx = ctx_store[rid]
+            pub = self._court_publish(ctx, state.commitment.claimed, rid)
+            verdict = protocol.court.escalate(
+                rid, pub, state.executor, active=np.asarray(ctx["active"]))
+            state = protocol.resolve(rid, verdict)
+            summary["fraud_proofs"] += len(state.proofs)
+            self.verify_stats["escalate_evals"] += \
+                cfg.num_edges * cfg.num_experts * len(ctx["xin"])
+            for cid in cid_store.pop(rid, []):
+                self.storage.discard(cid)
+            if state.phase is RoundPhase.ROLLED_BACK:
+                summary["convicted"].append(rid)
+
+        summary["slashed"] = sorted(
+            {ev.edge for ev in protocol.stakes.events[n_events:]})
+        if summary["convicted"] and domain == "train":
+            summary["replayed_metrics"] = self._replay_chain(
+                min(summary["convicted"]))
+        for rec in protocol.rollbacks[n_rollbacks:]:
+            self._mine({"kind": "rollback", "domain": domain,
+                        "rollback_of": rec.round_id,
+                        "executor": rec.executor,
+                        "chain": [rec.round_id] + rec.invalidated,
+                        "invalidated": rec.invalidated,
+                        "slashed": [rec.executor],
+                        "at_round": self.round})
+        return summary
+
+    def _replay_chain(self, first: int):
+        """Chained rollback: restore the (gate, experts) snapshot the
+        convicted round started from and re-execute every voided round —
+        the convicted one plus its INVALIDATED descendants — honestly and
+        in order, exactly one slash having been booked per conviction.
+        Returns the replayed metrics of the newest round (the host's
+        current round, when it is part of the chain)."""
+        cfg = self.cfg
+        chain = [rid for rid in sorted(self._round_ctx)
+                 if rid >= first and self.protocol.rounds[rid].phase in
+                 (RoundPhase.ROLLED_BACK, RoundPhase.INVALIDATED)]
+        self.gate, self.experts = self._round_ctx[first]["prev"]
+        metrics = None
+        for rid in chain:
+            ctx = self._round_ctx[rid]
+            (self.gate, self.experts, metrics) = self._train_step(
+                self.gate, self.experts, ctx["x"], ctx["y"],
+                jnp.zeros_like(jnp.asarray(ctx["mask_e"])),
+                jax.random.fold_in(ctx["rkey"], 1), ctx["atk"].noise_std,
+                jnp.asarray(ctx["atk"].colluding), ctx["gate_bias"],
+                ctx["active"], jnp.int32(ctx["executor"]))
+            metrics = jax.tree_util.tree_map(np.asarray, metrics)
+            self.verify_stats["base_evals"] += \
+                cfg.num_experts * len(ctx["xin"])
+        return metrics if chain and chain[-1] == self.round else None
+
+    def _prune_closed_rounds(self, protocol, ctx_store, cid_store):
+        """Release snapshots and audit-evidence blobs of rounds that hit a
+        terminal phase (the compact fraud proofs stay in the round
+        state)."""
+        for rid in list(ctx_store):
+            if protocol.rounds[rid].phase in TERMINAL_PHASES:
+                del ctx_store[rid]
+                for cid in cid_store.pop(rid, []):
+                    self.storage.discard(cid)
+
     def _optimistic_round(self, x, y, atk, mask_e, rkey, executor, prev,
                           metrics, payload, gate_bias, active):
-        """Commit -> optimistic accept -> audit -> (challenge -> court ->
-        slash + rollback) for one training round.  Returns the round's
-        final metrics (the honest re-execution's, if rolled back)."""
-        from repro.trust.protocol import RoundPhase
+        """Commit -> optimistic accept -> async audit -> (challenge ->
+        court -> slash + chained rollback) for one training round.
+
+        Under ``scheduling="pipelined"`` (default) the round's audit is
+        only *queued* here: the system proceeds to the next rounds on the
+        optimistically-accepted state and the backlog drains in one
+        grouped burst when the oldest window is about to close.  Fraud
+        confirmed after descendants committed rolls the whole chain back
+        (``_replay_chain``).  ``scheduling="synchronous"`` keeps the
+        audit on the critical path — the pre-pipeline reference
+        behavior.  Returns the round's final metrics (the honest
+        re-execution's, if rolled back)."""
         cfg, tc = self.cfg, self.trust_cfg
         xin = np.asarray(x if cfg.expert_kind == "cnn"
                          else np.asarray(x).reshape(len(x), -1))
@@ -401,79 +745,112 @@ class BMoESystem:
         bounds = chunk_bounds(batch, tc.chunks_per_expert)
         honest = self._eager_outputs(prev[1], xin, bounds)
         attacked = bool(np.asarray(mask_e)[executor] > 0)
-        claimed = honest
-        if attacked:
-            rng = np.random.default_rng(cfg.seed * 7919 + self.round)
-            claimed = honest + atk.noise_std * rng.standard_normal(
-                honest.shape).astype(honest.dtype)
-        state = self.protocol.commit(self.round, executor, claimed,
-                                     task_digest=payload["task"])
+        state = self._commit_round(self.protocol, self.round, executor,
+                                   honest, attacked, atk, self.round,
+                                   payload["task"])
         payload["commit_root"] = state.commitment.root[:16]
         payload["executor"] = executor
+        self._round_ctx[self.round] = {
+            "prev": prev, "x": x, "y": y, "xin": xin, "honest": honest,
+            "rkey": rkey, "executor": executor,
+            "mask_e": np.asarray(mask_e), "atk": atk,
+            "gate_bias": gate_bias, "active": active,
+        }
+        cids = self._audit_cids.setdefault(self.round, [])
+        recompute_fn = self._make_recompute(prev[1], xin, cids)
+        batch_fn = (self._make_batched_recompute(prev[1], xin, cids)
+                    if tc.audit_backend == "batched" else None)
+        self.protocol.schedule_audit(self.round, recompute_fn, batch_fn)
 
-        proofs = self.protocol.run_audits(
-            self.round, self._make_recompute(prev[1], xin),
-            self._make_batched_recompute(prev[1], xin)
-            if tc.audit_backend == "batched" else None)
-        audited = sum(r.recomputed_leaves for r in state.reports)
-        payload["audited_leaves"] = audited
-        self.verify_stats["verify_evals"] += \
-            audited * batch / max(state.commitment.chunks_per_expert, 1)
+        # synchronous: the audit lands in the commit round itself (the
+        # reference oracle); pipelined: drain only once a window forces it
+        drain_now = None if tc.scheduling == "synchronous" else self.round
+        summary = self._drain_trust(self.protocol, self._round_ctx,
+                                    self._audit_cids, drain_now, "train")
+        payload["audited_leaves"] = summary["audited_leaves"]
+        if summary["drained"]:
+            payload["drained_rounds"] = summary["drained"]
+        if summary["fraud_proofs"]:
+            payload["fraud_proofs"] = summary["fraud_proofs"]
+            payload["slashed"] = summary["slashed"]
+        if summary["replayed_metrics"] is not None:
+            payload["rolled_back"] = True
+            metrics = summary["replayed_metrics"]
 
-        if proofs:
-            # dispute court: one full M-way redundancy vote settles the
-            # round (paper Step 3 as the fallback, not the common case)
-            pub = np.broadcast_to(
-                honest[:, None],
-                (cfg.num_experts, cfg.num_edges) + honest.shape[1:]).copy()
-            att = np.asarray(mask_e) > 0
-            if atk.colluding:
-                pub[:, att] = claimed[:, None]   # coalition backs the executor
-            else:
-                rng = np.random.default_rng(cfg.seed * 104729 + self.round)
-                for m in np.nonzero(att)[0]:
-                    pub[:, m] = honest + atk.noise_std * rng.standard_normal(
-                        honest.shape).astype(honest.dtype)
-            pub[:, executor] = claimed
-            verdict = self.protocol.court.escalate(
-                self.round, pub, executor, active=np.asarray(active))
-            state = self.protocol.resolve(self.round, verdict)
-            self.verify_stats["escalate_evals"] += \
-                cfg.num_edges * cfg.num_experts * batch
-            # the verdict settles the round: the bulky expert blobs can
-            # go (the compact fraud proofs stay in the round state)
-            for cid in self._audit_cids.pop(self.round, []):
-                self.storage.discard(cid)
-            payload["fraud_proofs"] = len(proofs)
-            payload["slashed"] = [ev.edge for ev in self.protocol.stakes.events
-                                  if ev.round_id == self.round]
-            if state.phase is RoundPhase.ROLLED_BACK:
-                # undo the poisoned update; re-run the round on the
-                # court's trusted result (honest recompute)
-                payload["rolled_back"] = True
-                self.gate, self.experts = prev
-                (self.gate, self.experts, metrics) = self._train_step(
-                    self.gate, self.experts, x, y, jnp.zeros_like(mask_e),
-                    jax.random.fold_in(rkey, 1), atk.noise_std,
-                    jnp.asarray(atk.colluding), gate_bias, active,
-                    jnp.int32(executor))
-                metrics = jax.tree_util.tree_map(np.asarray, metrics)
-                self.verify_stats["base_evals"] += cfg.num_experts * batch
-
-        # async challenge window: close windows that have expired (this
-        # round's audits already ran, so window=0 behaves correctly) and
-        # release the closed rounds' audit evidence from storage
+        # close windows in deadline order (sequential finality: never past
+        # an unresolved dispute) and release closed rounds' evidence
         finalized = self.protocol.advance(self.round)
         if finalized:
             payload["finalized_rounds"] = finalized
-            for rid in finalized:
-                for cid in self._audit_cids.pop(rid, []):
-                    self.storage.discard(cid)
+        self._prune_closed_rounds(self.protocol, self._round_ctx,
+                                  self._audit_cids)
 
         metrics = dict(metrics)
         metrics["rolled_back"] = np.float32(
             1.0 if payload.get("rolled_back") else 0.0)
         return metrics
+
+    # ------------------------------------------------- pipeline flushing
+    def flush_trust(self) -> Dict:
+        """Close out the optimistic pipeline: run every still-queued audit
+        (training and inference domains), court-resolve what they raise,
+        and advance both clocks past the last open window so every
+        committed round reaches a terminal phase.  Call at the end of a
+        run (or before comparing two runs) — it is the pipelined
+        equivalent of the synchronous scheduler's per-round settlement."""
+        out: Dict = {}
+        if self.protocol is None:
+            return out
+        summary = self._drain_trust(self.protocol, self._round_ctx,
+                                    self._audit_cids, None, "train")
+        if summary["convicted"]:
+            out["rolled_back"] = summary["convicted"]
+        horizon = self.protocol.clock + self.trust_cfg.challenge_window
+        out["finalized"] = self.protocol.advance(horizon)
+        self._prune_closed_rounds(self.protocol, self._round_ctx,
+                                  self._audit_cids)
+        if self._infer_protocol is not None:
+            isummary = self._drain_trust(self._infer_protocol,
+                                         self._infer_ctx,
+                                         self._infer_audit_cids, None,
+                                         "infer")
+            self._record_infer_verdicts(isummary)
+            ihorizon = (self._infer_protocol.clock
+                        + self.trust_cfg.challenge_window)
+            out["infer_finalized"] = self._infer_protocol.advance(ihorizon)
+            for frid in out["infer_finalized"]:
+                self.infer_log.append({"event": "finalize", "round": frid})
+            self._prune_closed_rounds(self._infer_protocol, self._infer_ctx,
+                                      self._infer_audit_cids)
+        return out
+
+    # -------------------------------------------- optimistic inference
+    def _ensure_infer_protocol(self) -> OptimisticProtocol:
+        if self._infer_protocol is None:
+            # its own round clock/window, but the SAME stake book, court
+            # and reputation ledger: one edge deposit backs both
+            # workloads, and an inference conviction bars the executor
+            # from the training rotation too
+            # chained=False: inference batches run against frozen weights,
+            # so rounds are independent — a conviction revokes only its
+            # own round, never later in-flight batches
+            self._infer_protocol = OptimisticProtocol(
+                self.trust_cfg, self.cfg.num_edges, self.reputation,
+                stakes=self.protocol.stakes, court=self.protocol.court,
+                chained=False)
+        return self._infer_protocol
+
+    def _record_infer_verdicts(self, summary: Dict) -> None:
+        for rid in summary["convicted"]:
+            self.infer_log.append({"event": "revoke", "round": rid,
+                                   "executor":
+                                       self._infer_protocol.rounds[rid]
+                                       .executor})
+
+    def pending_inference(self) -> List[int]:
+        """Inference rounds still inside their challenge window."""
+        return ([] if self._infer_protocol is None
+                else self._infer_protocol.pending())
 
     # ----------------------------------------------------- latency model
     def latency_report(self, expert_bytes: int, result_bytes: int,
@@ -504,6 +881,10 @@ class BMoESystem:
             "comm_s": t_comm,
             "consensus_s": self._timers["consensus"] / r,
             "chain_s": self._timers["chain"] / r,
+            # verifier-pool audit seconds drained off the critical path
+            # (pipelined scheduling only; synchronous audits sit inside
+            # consensus_s) — reported separately, excluded from total_s
+            "audit_offpath_s": self._timers["audit"] / r,
             "total_s": self._timers["compute"] / r + t_comm
                        + self._timers["consensus"] / r
                        + self._timers["chain"] / r,

@@ -88,3 +88,14 @@ class Ledger:
             if all(b.payload.get(k) == v for k, v in kv.items()):
                 return b
         return None
+
+    def find_all(self, **kv) -> List[Block]:
+        """All blocks whose payload matches, chain order."""
+        return [b for b in self.blocks
+                if all(b.payload.get(k) == v for k, v in kv.items())]
+
+    def rollbacks(self) -> List[Block]:
+        """The chain's rollback record: one block per confirmed fraud
+        (kind="rollback"), each naming the convicted round, the slashed
+        executor, and the voided chain of optimistic descendants."""
+        return self.find_all(kind="rollback")

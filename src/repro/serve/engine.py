@@ -22,8 +22,9 @@ finalizing it.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from collections import deque
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +76,7 @@ class SessionRecord:
     root: str = ""
     finalized: bool = False
     revoked: bool = False
+    audited: bool = False              # at least one spot-check pass ran
 
     def append(self, tick: int, token: int) -> None:
         self.leaves.append(_tick_leaf(self.request_id, tick, token))
@@ -134,6 +136,16 @@ class ServingEngine:
             trust.lazy_verifier_prob, trust.seed)
             if trust is not None else None)
         self._finalized: set = set()
+        # deadline-ordered auto-audit queue: a sealed session's audit is
+        # parked off the critical path and drained (whole backlog at
+        # once, mirroring OptimisticProtocol.pop_audit_jobs) when the
+        # oldest challenge window is about to close — so a tampered
+        # stream is caught *before* it can finalize
+        self._audit_queue: List[Tuple[int, int]] = []   # (deadline, rid)
+        # sessions neither finalized nor revoked: the only ones the
+        # finality-deferral and chained-revocation scans must touch —
+        # O(open), not O(all sessions ever served)
+        self._open_sessions: set = set()
 
     @property
     def verified(self) -> bool:
@@ -183,6 +195,7 @@ class ServingEngine:
                 slot.generated = []
                 if self.verified:
                     self.records[r["id"]] = SessionRecord(request_id=r["id"])
+                    self._open_sessions.add(r["id"])
 
     def _emit(self, slot: SlotState, token: int) -> None:
         slot.generated.append(token)
@@ -201,14 +214,66 @@ class ServingEngine:
                                  "root": root[:16], "tick": self.tick,
                                  "leaves": len(rec.leaves)})
         self._window.enter(rid, self.tick)
+        if rec.leaves:
+            heapq.heappush(self._audit_queue,
+                           (self.tick + self.trust.challenge_window, rid))
+
+    def _audit_full(self, rid: int) -> None:
+        """One spot-check pass per verifier (stopping early once a fraud
+        revokes the session)."""
+        for v in range(self._auditors.num_verifiers):
+            self.audit_session(rid, v)
+            if self.records[rid].revoked:
+                break
+
+    def _drain_session_audits(self) -> None:
+        """Run queued session audits once the oldest deadline is due —
+        and then the whole backlog, so audits burst off the critical
+        path instead of blocking every tick."""
+        if not self._audit_queue or self._audit_queue[0][0] > self.tick:
+            return
+        while self._audit_queue:
+            _, rid = heapq.heappop(self._audit_queue)
+            rec = self.records[rid]
+            if rec.revoked or not rec.root:
+                continue
+            self._audit_full(rid)
+
+    @staticmethod
+    def _overlaps(a: SessionRecord, b: SessionRecord) -> bool:
+        return (bool(a.ticks) and bool(b.ticks)
+                and b.ticks[0] <= a.ticks[-1] and a.ticks[0] <= b.ticks[-1])
 
     def _expire_windows(self) -> None:
+        self._drain_session_audits()
         for rid in self._window.expire(self.tick):
             rec = self.records[rid]
             if rec.revoked:
                 continue
+            # serving-side sequential finality: a stream cannot finalize
+            # while a tick-overlapping co-batched stream is still being
+            # produced (its later-confirmed fraud would void this one) or
+            # is sealed but unchecked — spot-check the neighbour first,
+            # which revokes this stream too if the neighbour was altered
+            deferred = False
+            for rid2 in list(self._open_sessions):
+                dep = self.records[rid2]
+                if rid2 == rid or dep.revoked \
+                        or not self._overlaps(rec, dep):
+                    continue
+                if not dep.root:
+                    if rid2 not in self._done:   # neighbour still streaming
+                        self._window.hold(rid, self.tick + 1)
+                        deferred = True
+                        break
+                    continue                     # empty session: no leaves
+                if not dep.audited:
+                    self._audit_full(rid2)
+            if deferred or rec.revoked:
+                continue
             rec.finalized = True
             self._finalized.add(rid)
+            self._open_sessions.discard(rid)
             self.session_log.append({"event": "finalize", "request": rid,
                                      "tick": self.tick})
 
@@ -299,15 +364,40 @@ class ServingEngine:
                 leaf for leaf in sampled
                 if not MerkleTree.verify(rec.root, rec.leaves[leaf],
                                          tree.prove(leaf))})
+        rec.audited = True
         if mismatches:
-            rec.revoked = True
-            rec.finalized = False        # a revoked record is never final
-            self._finalized.discard(request_id)
-            self._window.revoke(request_id)
-            self.session_log.append({"event": "revoke", "request": request_id,
-                                     "leaves": mismatches})
+            self._revoke_session(request_id, mismatches)
         return {"request": request_id, "sampled": sampled,
                 "mismatches": mismatches, "revoked": rec.revoked}
+
+    def _revoke_session(self, request_id: int, mismatches: List[int]) -> None:
+        """Revoke a session, then chain the revocation: every session
+        whose ticks overlap the revoked stream's and whose window is
+        still open is revoked with it — those tokens came out of the
+        same batched decode calls as the fraudulent ones, so their
+        provenance is void (the per-tick analogue of the training
+        pipeline's INVALIDATED descendants; no separate fraud is booked
+        for them).  Already-finalized sessions are immune: their windows
+        closed clean before the fraud was confirmed."""
+        rec = self.records[request_id]
+        rec.revoked = True
+        rec.finalized = False            # a revoked record is never final
+        self._finalized.discard(request_id)
+        self._open_sessions.discard(request_id)
+        self._window.revoke(request_id)
+        self.session_log.append({"event": "revoke", "request": request_id,
+                                 "leaves": mismatches})
+        for rid in list(self._open_sessions):
+            dep = self.records[rid]
+            if dep.revoked or dep.finalized or not self._overlaps(rec, dep):
+                continue
+            dep.revoked = True
+            self._finalized.discard(rid)
+            self._open_sessions.discard(rid)
+            self._window.revoke(rid)
+            self.session_log.append({"event": "revoke_dependent",
+                                     "request": rid,
+                                     "cause": request_id})
 
     def audit_all(self) -> List[Dict]:
         return [self.audit_session(rid, v)

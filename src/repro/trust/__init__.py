@@ -32,19 +32,20 @@ Modules
   ledger.
 """
 from repro.trust.audit import (AuditPlan, AuditReport, BatchRecomputeFn,
-                               FraudProof, VerifierPool, verify_fraud_proof)
+                               FraudProof, MultiBatchRecomputeFn,
+                               VerifierPool, verify_fraud_proof)
 from repro.trust.commitments import (MerklePath, MerkleTree, RoundCommitment,
                                      commit_outputs, leaf_digest,
                                      leaf_digest_batch)
-from repro.trust.protocol import (OptimisticProtocol, RoundPhase, RoundState,
-                                  TrustConfig)
+from repro.trust.protocol import (AuditJob, OptimisticProtocol, RollbackRecord,
+                                  RoundPhase, RoundState, TrustConfig)
 from repro.trust.slashing import DisputeCourt, StakeBook
 
 __all__ = [
     "AuditPlan", "AuditReport", "BatchRecomputeFn", "FraudProof",
-    "VerifierPool", "verify_fraud_proof",
+    "MultiBatchRecomputeFn", "VerifierPool", "verify_fraud_proof",
     "MerklePath", "MerkleTree", "RoundCommitment", "commit_outputs",
     "leaf_digest", "leaf_digest_batch",
-    "OptimisticProtocol", "RoundPhase", "RoundState",
-    "TrustConfig", "DisputeCourt", "StakeBook",
+    "AuditJob", "OptimisticProtocol", "RollbackRecord", "RoundPhase",
+    "RoundState", "TrustConfig", "DisputeCourt", "StakeBook",
 ]

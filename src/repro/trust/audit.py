@@ -35,6 +35,17 @@ RecomputeFn = Callable[[int, slice], np.ndarray]
 # with a single jitted grouped kernel instead of S eager dispatches.
 BatchRecomputeFn = Callable[[Sequence[int], Sequence[slice]], np.ndarray]
 
+# multi_batch_recompute_fn(round_slots, expert_indices, batch_slices) ->
+# stacked honest chunks (S, Cmax, ...): like BatchRecomputeFn but rows
+# may belong to DIFFERENT rounds — ``round_slots[s]`` indexes the round
+# (in the order the commitments were handed to ``audit_rounds``) whose
+# snapshot state and task row ``s`` must be recomputed against.  One
+# call covers a whole drained audit backlog: the host stacks the
+# per-round expert-bank snapshots and concatenates the per-round tasks
+# so several rounds' audits fuse into one grouped kernel dispatch.
+MultiBatchRecomputeFn = Callable[
+    [Sequence[int], Sequence[int], Sequence[slice]], np.ndarray]
+
 
 def pack_audit_batch(expert_ids: Sequence[int], slices: Sequence[slice],
                      bucket: int = 4):
@@ -57,6 +68,30 @@ def pack_audit_batch(expert_ids: Sequence[int], slices: Sequence[slice],
     for s, (e, sl) in enumerate(zip(expert_ids, slices)):
         idx[s, :sl.stop - sl.start] = np.arange(sl.start, sl.stop)
         gid[s] = int(e)
+    return idx, gid, n
+
+
+def pack_audit_batch_multi(slots: Sequence[int], expert_ids: Sequence[int],
+                           slices: Sequence[slice],
+                           row_offsets: Sequence[int], num_experts: int,
+                           bucket: int = 4):
+    """Cross-round variant of ``pack_audit_batch``: the work list spans
+    several rounds whose expert banks are stacked to ``(R*N, ...)`` and
+    whose tasks are concatenated row-wise.  Sample ``s`` of round slot
+    ``k = slots[s]`` reads task rows ``row_offsets[k] + slice`` and
+    expert ``k * num_experts + expert_ids[s]`` — so one grouped kernel
+    call recomputes a whole drained audit backlog.  Returns the same
+    ``(idx, gid, n)`` contract as ``pack_audit_batch``.
+    """
+    n = len(expert_ids)
+    sp = -(-n // bucket) * bucket
+    cmax = max(sl.stop - sl.start for sl in slices) if n else 1
+    idx = np.zeros((sp, cmax), np.int32)
+    gid = np.zeros(sp, np.int32)
+    for s, (k, e, sl) in enumerate(zip(slots, expert_ids, slices)):
+        off = int(row_offsets[k])
+        idx[s, :sl.stop - sl.start] = np.arange(off + sl.start, off + sl.stop)
+        gid[s] = int(k) * num_experts + int(e)
     return idx, gid, n
 
 
@@ -245,6 +280,14 @@ class VerifierPool:
             lengths = [sl.stop - sl.start for sl in slices]
             digests = leaf_digest_batch(stacked, lengths)
             digest_of = dict(zip(plan.unique_leaves, digests))
+        return self._reports_from_digests(commitment, plan, digest_of)
+
+    @staticmethod
+    def _reports_from_digests(commitment: RoundCommitment, plan: AuditPlan,
+                              digest_of: Dict[int, str]) -> List[AuditReport]:
+        """Per-verifier reports/fraud proofs from a plan plus the honest
+        digests of its unique leaves (shared by ``audit_batched`` and the
+        cross-round ``audit_rounds``)."""
         tree = None
         reports = []
         for v, leaves in plan.sampled.items():
@@ -270,6 +313,49 @@ class VerifierPool:
                         path=tree.prove(leaf), claimed_digest=claimed,
                         recomputed_digest=honest, verifier=v))
         return reports
+
+    def audit_rounds(self, commitments: Sequence[RoundCommitment],
+                     multi_recompute_fn: MultiBatchRecomputeFn,
+                     verifiers: Optional[Sequence[int]] = None
+                     ) -> Dict[int, List[AuditReport]]:
+        """A whole drained audit *backlog* as ONE recompute call.
+
+        The pipelined protocol parks each round's audit until its window
+        is about to close, then drains the backlog in a burst; this is
+        the burst's engine.  Every round's lottery is planned exactly as
+        ``audit_batched`` would (same RNG streams, keyed by round id, so
+        reports are round-for-round identical to draining one at a
+        time), the deduped work lists are concatenated with a round-slot
+        tag per row, recomputed in a single ``multi_recompute_fn`` call,
+        and hashed in one ``leaf_digest_batch`` pass.  Returns reports
+        keyed by round id.
+        """
+        plans = [self.plan_audits(c.round_id, c.num_leaves, verifiers)
+                 for c in commitments]
+        slots: List[int] = []
+        experts: List[int] = []
+        slices: List[slice] = []
+        for k, (com, plan) in enumerate(zip(commitments, plans)):
+            for leaf in plan.unique_leaves:
+                e, _, sl = com.leaf_coords(leaf)
+                slots.append(k)
+                experts.append(e)
+                slices.append(sl)
+        digests: List[str] = []
+        if slots:
+            stacked = np.asarray(multi_recompute_fn(slots, experts, slices))
+            digests = leaf_digest_batch(
+                stacked, [sl.stop - sl.start for sl in slices])
+        out: Dict[int, List[AuditReport]] = {}
+        cursor = 0
+        for com, plan in zip(commitments, plans):
+            digest_of = dict(zip(
+                plan.unique_leaves,
+                digests[cursor:cursor + len(plan.unique_leaves)]))
+            cursor += len(plan.unique_leaves)
+            out[com.round_id] = self._reports_from_digests(com, plan,
+                                                           digest_of)
+        return out
 
     def detection_probability(self, corrupted_leaves: int,
                               honest_verifiers: Optional[int] = None) -> float:

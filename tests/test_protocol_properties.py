@@ -1,0 +1,295 @@
+"""Protocol property tests (hypothesis stateful + deterministic walks).
+
+``ProtocolModel`` drives an ``OptimisticProtocol`` through arbitrary
+interleavings of commit / run_audits / resolve / advance / drain and
+checks the protocol invariants after every step:
+
+- conservation: every committed round is in exactly one of
+  {finalized} ∪ {rolled_back, invalidated} ∪ {pending}, and the stats
+  counters agree with the phase census;
+- phases only move forward (and terminal phases never change);
+- a CHALLENGED round never finalizes via ``advance``;
+- sequential finality: nothing finalizes past an open round;
+- stake is never negative and never exceeds the initial deposit;
+- ``pending()`` is deadline-ordered and phase-consistent;
+- with audit_rate=1.0, one confirmed slash per convicted round.
+
+The hypothesis machine explores random interleavings in CI; the
+deterministic random walks below always run (hypothesis is optional —
+see conftest), so the invariants are exercised in every environment.
+
+Also here: ``ChallengeWindow`` edge cases and the ``advance``
+O(rounds^2) regression pin (deadline heap, not a full-history scan).
+"""
+import random
+
+import numpy as np
+import pytest
+from hypothesis import settings, strategies as st
+from hypothesis.stateful import RuleBasedStateMachine, invariant, rule
+
+from repro.trust.protocol import (PHASE_RANK, TERMINAL_PHASES,
+                                  ChallengeWindow, OptimisticProtocol,
+                                  RoundPhase, TrustConfig)
+from repro.trust.slashing import Verdict
+
+E, B, C, EDGES = 2, 4, 3, 4
+
+
+class ProtocolModel:
+    """The protocol plus just enough book-keeping to know ground truth
+    (which rounds were committed fraudulently) and phase history."""
+
+    def __init__(self, window: int = 2):
+        self.proto = OptimisticProtocol(
+            TrustConfig(challenge_window=window, audit_rate=1.0,
+                        num_verifiers=1, seed=0), num_edges=EDGES)
+        self.honest = np.zeros((E, B, C), np.float32)
+        self.bad = self.honest + 1.0
+        self.fraudulent = {}
+        self.next_rid = 0
+        self.clock = 0
+        self.last_phase = {}
+        # rounds that were open when an ancestor was convicted: they
+        # must NEVER finalize, whatever the interleaving
+        self.doomed = set()
+
+    # ------------------------------------------------------------ steps
+    def do_commit(self, fraud: bool, schedule: bool) -> None:
+        rid = self.next_rid
+        self.next_rid += 1
+        executor = self.proto.pick_executor(rid)
+        self.proto.commit(rid, executor,
+                          self.bad if fraud else self.honest)
+        self.fraudulent[rid] = fraud
+        if schedule:                    # park the audit off-path
+            self.proto.schedule_audit(
+                rid, lambda e, sl: self.honest[e, sl])
+        self.clock = max(self.clock, rid)
+        self.check()
+
+    def do_audit(self, offset: int) -> None:
+        open_rounds = self.proto.pending()
+        if not open_rounds:
+            return
+        rid = open_rounds[offset % len(open_rounds)]
+        proofs = self.proto.run_audits(rid,
+                                       lambda e, sl: self.honest[e, sl])
+        # audit_rate=1.0: an ACCEPTED fraudulent round is always caught
+        if proofs:
+            assert self.fraudulent[rid]
+            assert self.proto.rounds[rid].phase is RoundPhase.CHALLENGED
+        self.check()
+
+    def do_drain(self) -> None:
+        self.proto.drain_audits(self.clock)
+        self.check()
+
+    def do_grief(self, offset: int) -> None:
+        """A lying verifier pass: recomputes against a WRONG tensor, so
+        it challenges honest rounds (a fraudulent round's claimed output
+        matches the bad tensor and audits clean).  The court later
+        acquits — unless an ancestor's conviction tainted the round."""
+        open_rounds = self.proto.pending()
+        if not open_rounds:
+            return
+        rid = open_rounds[offset % len(open_rounds)]
+        self.proto.run_audits(rid, lambda e, sl: self.bad[e, sl])
+        self.check()
+
+    def do_resolve(self) -> None:
+        challenged = [rid for rid in self.proto.pending()
+                      if self.proto.rounds[rid].phase
+                      is RoundPhase.CHALLENGED]
+        if not challenged:
+            return
+        rid = challenged[0]
+        guilty = self.fraudulent[rid]
+        before_open = set(self.proto.pending())
+        state = self.proto.resolve(rid, Verdict(
+            round_id=rid, trusted=self.honest,
+            support=np.full(E, float(EDGES)),
+            flags=np.ones((E, EDGES), np.int32), executor_guilty=guilty))
+        if guilty:
+            # everything open above the convicted round is doomed
+            self.doomed |= {r for r in before_open if r > rid}
+        else:
+            # acquittal: ACCEPTED again, unless a rolled-back ancestor
+            # tainted it — then it invalidates, never finalizes
+            assert state.phase is (RoundPhase.INVALIDATED
+                                   if rid in self.doomed
+                                   else RoundPhase.ACCEPTED)
+        self.check()
+
+    def do_advance(self, dt: int) -> None:
+        self.clock += dt
+        challenged_before = {
+            rid for rid in self.proto.pending()
+            if self.proto.rounds[rid].phase is RoundPhase.CHALLENGED}
+        done = self.proto.advance(self.clock)
+        # a CHALLENGED round never finalizes via advance
+        assert not set(done) & challenged_before
+        self.check()
+
+    # -------------------------------------------------------- invariants
+    def check(self) -> None:
+        proto = self.proto
+        phases = {rid: s.phase for rid, s in proto.rounds.items()}
+        n_fin = sum(p is RoundPhase.FINALIZED for p in phases.values())
+        n_rb = sum(p is RoundPhase.ROLLED_BACK for p in phases.values())
+        n_inv = sum(p is RoundPhase.INVALIDATED for p in phases.values())
+        pending = proto.pending()
+        # conservation: committed == finalized + rolled_back + pending
+        # (rolled_back counts the convicted round AND the invalidated
+        # descendants voided with it — both are undone state)
+        assert proto.stats["committed"] == len(phases)
+        assert proto.stats["committed"] == \
+            n_fin + (n_rb + n_inv) + len(pending)
+        assert proto.stats["finalized"] == n_fin
+        assert proto.stats["rolled_back"] == n_rb
+        assert proto.stats["invalidated"] == n_inv
+        # one slash per convicted round, and stake stays in [0, initial]
+        assert len(proto.stakes.events) == n_rb
+        assert (proto.stakes.stake >= 0).all()
+        assert proto.stakes.stake.max() <= proto.stakes.initial + 1e-9
+        # pending(): deadline-ordered (== round-ordered) phase census
+        assert pending == sorted(pending)
+        assert set(pending) == {rid for rid, p in phases.items()
+                                if p in (RoundPhase.ACCEPTED,
+                                         RoundPhase.CHALLENGED)}
+        # sequential finality: nothing finalizes past an open round
+        finalized = [rid for rid, p in phases.items()
+                     if p is RoundPhase.FINALIZED]
+        if finalized and pending:
+            assert max(finalized) < min(pending)
+        # a round open at an ancestor's conviction never finalizes
+        assert not self.doomed & set(finalized)
+        # phases only move forward; terminal phases never change
+        for rid, phase in phases.items():
+            prev = self.last_phase.get(rid)
+            if prev is not None:
+                assert PHASE_RANK[phase] >= PHASE_RANK[prev]
+                if prev in TERMINAL_PHASES:
+                    assert phase is prev
+            self.last_phase[rid] = phase
+
+    def settle(self) -> None:
+        """Close everything out, then re-check conservation at rest."""
+        self.proto.drain_audits(None)
+        for _ in range(self.next_rid + 1):
+            self.do_resolve()
+        self.do_advance(self.proto.cfg.challenge_window + self.next_rid)
+        assert self.proto.pending() == []
+        convicted = [rid for rid, f in self.fraudulent.items()
+                     if self.proto.rounds[rid].phase
+                     is RoundPhase.ROLLED_BACK]
+        assert all(self.fraudulent[rid] for rid in convicted)
+
+
+class ProtocolMachine(RuleBasedStateMachine):
+    def __init__(self):
+        super().__init__()
+        self.model = ProtocolModel()
+
+    @rule(fraud=st.booleans(), schedule=st.booleans())
+    def commit(self, fraud, schedule):
+        self.model.do_commit(fraud, schedule)
+
+    @rule(offset=st.integers(min_value=0, max_value=7))
+    def audit(self, offset):
+        self.model.do_audit(offset)
+
+    @rule(offset=st.integers(min_value=0, max_value=7))
+    def grief(self, offset):
+        self.model.do_grief(offset)
+
+    @rule()
+    def drain(self):
+        self.model.do_drain()
+
+    @rule()
+    def resolve(self):
+        self.model.do_resolve()
+
+    @rule(dt=st.integers(min_value=0, max_value=3))
+    def advance(self, dt):
+        self.model.do_advance(dt)
+
+    @invariant()
+    def invariants(self):
+        self.model.check()
+
+
+TestProtocolMachine = ProtocolMachine.TestCase
+TestProtocolMachine.settings = settings(max_examples=25,
+                                        stateful_step_count=50,
+                                        deadline=None)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_protocol_random_walk(seed):
+    """Deterministic stand-in for the hypothesis machine: a seeded random
+    interleaving of the same steps, invariant-checked at every step and
+    settled at the end — runs even where hypothesis is not installed."""
+    rng = random.Random(seed)
+    model = ProtocolModel(window=rng.choice([0, 1, 2, 3]))
+    steps = [
+        lambda: model.do_commit(rng.random() < 0.3, rng.random() < 0.5),
+        lambda: model.do_audit(rng.randrange(8)),
+        lambda: model.do_grief(rng.randrange(8)),
+        lambda: model.do_drain(),
+        lambda: model.do_resolve(),
+        lambda: model.do_advance(rng.randrange(4)),
+    ]
+    for _ in range(250):
+        rng.choice(steps)()
+    model.settle()
+
+
+# --------------------------------------------- advance scaling regression
+def test_advance_touches_only_open_rounds():
+    """``advance``/``pending`` used to scan every historical round per
+    call (O(rounds^2) over a run); the deadline heap keeps them O(open).
+    Pins both the pending() contents and the bounded heap size."""
+    proto = OptimisticProtocol(TrustConfig(challenge_window=3,
+                                           audit_rate=0.0,
+                                           num_verifiers=1), num_edges=4)
+    outs = np.zeros((E, B, C), np.float32)
+    for r in range(200):
+        proto.commit(r, r % 4, outs)
+        done = proto.advance(r)
+        assert done == ([r - 3] if r >= 3 else [])
+        # exactly the open window, deadline-ordered
+        assert proto.pending() == list(range(max(0, r - 2), r + 1))
+        # the heap holds only open rounds — advance never re-walks history
+        assert len(proto._open_heap) <= 3
+    assert proto.stats["finalized"] == 197
+
+
+# ------------------------------------------------ ChallengeWindow edges
+def test_challenge_window_revoke_after_expire_is_noop():
+    win = ChallengeWindow(2)
+    win.enter(1, now=0)
+    assert win.expire(2) == [1]
+    win.revoke(1)                      # already final: nothing to revoke
+    assert win.revoked == [] and len(win) == 0
+
+
+def test_challenge_window_duplicate_enter_refreshes_deadline():
+    win = ChallengeWindow(3)
+    win.enter(5, now=0)
+    win.enter(5, now=2)                # re-commit: window restarts
+    assert win.deadline(5) == 5
+    assert win.expire(3) == []         # old deadline no longer applies
+    assert win.expire(5) == [5]
+    assert len(win) == 0
+
+
+def test_challenge_window_expire_exactly_at_deadline_tick():
+    win = ChallengeWindow(4)
+    win.enter(9, now=10)
+    assert win.expire(13) == []        # one tick early: still open
+    assert win.expire(14) == [9]       # now == deadline: closes
+    win.enter(7, now=20)
+    win.revoke(7)                      # revoke before expiry sticks
+    assert win.expire(24) == [] and win.revoked == [7]
