@@ -1,0 +1,210 @@
+"""Dense vs sparse dispatch on the B-MoE hot path: the CI gate for the
+sparse-execution claim.
+
+Two ``framework="optimistic"`` systems train side-by-side on identical
+batches at the paper config (``num_experts=8, top_k=2``, MLP experts,
+``capacity_factor=1.0``): one with ``dispatch="dense"`` (every expert
+over the full batch — the pre-sparse oracle) and one with
+``dispatch="sparse"`` (top-k scatter-dispatch into capacity buckets +
+grouped GEMM + gather-combine, with sparse per-(expert, bucket-chunk)
+commitments).  Measured per round:
+
+- **expert-evals** — rows actually pushed through the expert bank by the
+  canonical execution (``N*B`` dense, ``N*capacity`` sparse, padding
+  included — the physically computed GEMM rows), plus the audit-side
+  verify-evals, which shrink by the same ``top_k/num_experts`` factor
+  because sparse commitments cover only the bucketed buffers;
+- **wall-clock** — train-round and inference step time (reported, not
+  gated: CPU-interpret timing is too noisy for a hard gate);
+- **trajectory** — held-out accuracy of both systems, which must agree
+  within ``--acc-tol`` (drops at capacity_factor=1.0 must not change
+  what is learned);
+- **audit bit-identity** — a short attacked sparse run under the
+  batched audit engine must reproduce the eager oracle's verdicts
+  (sampled leaves, digests, convictions) exactly.
+
+Writes ``BENCH_dispatch.json`` and exits non-zero (the CI gate) if
+sparse does not cut expert-evals by at least ``1 - top_k/num_experts``
+(75% at the paper config), if the accuracy trajectories diverge, or if
+batched sparse audits are not bit-identical to eager.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset, row
+from repro.core.attacks import AttackConfig
+from repro.core.bmoe import BMoEConfig, BMoESystem, sparse_capacity
+from repro.core.ledger import digest_tree
+from repro.core.reputation import ReputationConfig
+from repro.trust.protocol import TrustConfig
+
+NUM_EXPERTS = 8
+TOP_K = 2
+BATCH = 512
+CAPACITY_FACTOR = 1.0
+
+
+def _system(dispatch: str, *, attack=AttackConfig(), audit_backend="batched",
+            seed=0) -> BMoESystem:
+    # workload_balance (paper §VI-C, the loss-free gate bias) on for BOTH
+    # systems: capacity buckets at capacity_factor=1.0 need balanced
+    # routing (unbalanced early routing overflows buckets and drops ~10%
+    # of assignments; the balancer keeps drops at the ~3% binomial
+    # fluctuation level) — and the dense oracle gets the same gate so the
+    # trajectory comparison stays apples-to-apples
+    cfg = BMoEConfig(
+        framework="optimistic", expert_kind="mlp", num_experts=NUM_EXPERTS,
+        num_edges=NUM_EXPERTS, top_k=TOP_K, dispatch=dispatch,
+        capacity_factor=CAPACITY_FACTOR, attack=attack, pow_difficulty=2,
+        seed=seed, workload_balance=True,
+        reputation=ReputationConfig(init=0.5, gain=0.01, slash=0.4,
+                                    exclusion_threshold=0.2),
+        trust=TrustConfig(audit_rate=0.1, challenge_window=2,
+                          audit_backend=audit_backend))
+    return BMoESystem(cfg)
+
+
+def _audits_bit_identical(xtr, ytr, rounds: int = 4) -> bool:
+    """Attacked sparse run, batched vs eager audit engine: verdicts,
+    lotteries and post-rollback state must agree bit-for-bit."""
+    atk = AttackConfig(malicious_edges=(2,), attack_prob=1.0, noise_std=5.0)
+    runs = []
+    for backend in ("batched", "eager"):
+        s = _system("sparse", attack=atk, audit_backend=backend)
+        rng = np.random.default_rng(1)
+        for idx in [rng.integers(0, len(xtr), 128) for _ in range(rounds)]:
+            s.train_round(xtr[idx], ytr[idx])
+        s.flush_trust()
+        runs.append(s)
+    a, b = runs
+    same_reports = all(
+        [(r.verifier, r.sampled_leaves, r.lazy)
+         for r in a.protocol.rounds[rid].reports] ==
+        [(r.verifier, r.sampled_leaves, r.lazy)
+         for r in b.protocol.rounds[rid].reports]
+        and [(p.leaf_index, p.expert, p.claimed_digest, p.recomputed_digest)
+             for p in a.protocol.rounds[rid].proofs] ==
+        [(p.leaf_index, p.expert, p.claimed_digest, p.recomputed_digest)
+         for p in b.protocol.rounds[rid].proofs]
+        for rid in a.protocol.rounds)
+    same_slashes = [(e.round_id, e.edge) for e in a.protocol.stakes.events] \
+        == [(e.round_id, e.edge) for e in b.protocol.stakes.events]
+    same_state = digest_tree(a.experts) == digest_tree(b.experts)
+    return bool(same_reports and same_slashes and same_state
+                and a.protocol.stakes.events)
+
+
+def main(rounds: int = 20, json_path: str = "BENCH_dispatch.json",
+         acc_tol: float = 0.1, gate: bool = True, trials: int = 3):
+    xtr, ytr, xte, yte = dataset("fmnist")
+    dense = _system("dense")
+    sparse = _system("sparse")
+    rng = np.random.default_rng(0)
+    batches = [rng.integers(0, len(xtr), BATCH) for _ in range(rounds)]
+
+    # interleaved training: machine drift hits both systems equally
+    walls = {"dense": 0.0, "sparse": 0.0}
+    losses = {"dense": [], "sparse": []}
+    for idx in batches:
+        for name, s in (("dense", dense), ("sparse", sparse)):
+            t0 = time.perf_counter()
+            m = s.train_round(xtr[idx], ytr[idx])
+            walls[name] += time.perf_counter() - t0
+            losses[name].append(float(m["loss"]))
+    dense.flush_trust()
+    sparse.flush_trust()
+
+    acc = {name: s.evaluate(xte[:1000], yte[:1000], attack=AttackConfig())
+           for name, s in (("dense", dense), ("sparse", sparse))}
+
+    # inference step: best-of-trials on a fixed batch (commit=False: the
+    # pure compute probe, no commitments minted)
+    infer_s = {}
+    for name, s in (("dense", dense), ("sparse", sparse)):
+        s.infer(xte[:BATCH], commit=False)          # warmup/compile
+        best = float("inf")
+        for _ in range(trials):
+            t0 = time.perf_counter()
+            s.infer(xte[:BATCH], commit=False)
+            best = min(best, time.perf_counter() - t0)
+        infer_s[name] = best
+
+    vd = dense.verification_report()
+    vs = sparse.verification_report()
+    cap = sparse_capacity(sparse.cfg, BATCH)
+    evals = {"dense": NUM_EXPERTS * BATCH, "sparse": NUM_EXPERTS * cap}
+    reduction = 1.0 - evals["sparse"] / evals["dense"]
+    target = 1.0 - TOP_K / NUM_EXPERTS
+    acc_gap = abs(acc["dense"] - acc["sparse"])
+    bit_identical = _audits_bit_identical(xtr, ytr)
+
+    result = {
+        "config": {"num_experts": NUM_EXPERTS, "top_k": TOP_K,
+                   "batch": BATCH, "capacity_factor": CAPACITY_FACTOR,
+                   "capacity": cap, "rounds": rounds, "audit_rate": 0.1},
+        "train_s_per_round": {k: walls[k] / rounds for k in walls},
+        "infer_s_per_batch": infer_s,
+        "train_speedup": walls["dense"] / max(walls["sparse"], 1e-12),
+        "infer_speedup": infer_s["dense"] / max(infer_s["sparse"], 1e-12),
+        "expert_evals_per_round": evals,
+        "expert_evals_reduction": reduction,
+        "expert_evals_reduction_target": target,
+        "base_evals_per_round": {"dense": vd["base_evals_per_round"],
+                                 "sparse": vs["base_evals_per_round"]},
+        "verify_evals_per_round": {"dense": vd["verify_evals_per_round"],
+                                   "sparse": vs["verify_evals_per_round"]},
+        "accuracy": acc,
+        "accuracy_gap": acc_gap,
+        "accuracy_tolerance": acc_tol,
+        "final_loss": {k: losses[k][-1] for k in losses},
+        "audits_bit_identical": bit_identical,
+    }
+    with open(json_path, "w") as f:
+        json.dump(result, f, indent=2)
+
+    rows = [
+        row("dispatch_dense_train", walls["dense"] / rounds * 1e6,
+            f"evals={evals['dense']};acc={acc['dense']:.3f}"),
+        row("dispatch_sparse_train", walls["sparse"] / rounds * 1e6,
+            f"evals={evals['sparse']};acc={acc['sparse']:.3f};"
+            f"speedup_x={result['train_speedup']:.2f}"),
+        row("dispatch_infer", infer_s["sparse"] * 1e6,
+            f"dense_us={infer_s['dense'] * 1e6:.1f};"
+            f"speedup_x={result['infer_speedup']:.2f}"),
+        row("dispatch_claims", 0.0,
+            f"evals_reduction={reduction:.3f}(target>={target:.3f});"
+            f"acc_gap={acc_gap:.3f};"
+            f"verify_evals_sparse={vs['verify_evals_per_round']:.0f}"
+            f"_vs_dense={vd['verify_evals_per_round']:.0f};"
+            f"audits_bit_identical={bit_identical}"),
+    ]
+    if gate:
+        if reduction < target - 1e-9:
+            raise SystemExit(
+                f"perf gate: sparse dispatch cut expert-evals by "
+                f"{reduction:.3f}, below 1 - top_k/num_experts = {target}")
+        if acc_gap > acc_tol:
+            raise SystemExit(
+                f"perf gate: sparse/dense accuracy gap {acc_gap:.3f} "
+                f"exceeds tolerance {acc_tol}")
+        if not bit_identical:
+            raise SystemExit(
+                "perf gate: batched sparse audits diverged from the "
+                "eager oracle")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--json", default="BENCH_dispatch.json")
+    ap.add_argument("--acc-tol", type=float, default=0.1)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(args.rounds, args.json, args.acc_tol, trials=args.trials)

@@ -11,15 +11,16 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (audit_kernels, fig2_activation_ratio,
-                            fig4a_training, fig4b_latency, fig4c_inference,
-                            kernel_bench, roofline_table, sec6_extensions,
-                            trust_overhead)
+    from benchmarks import (audit_kernels, dispatch_bench,
+                            fig2_activation_ratio, fig4a_training,
+                            fig4b_latency, fig4c_inference, kernel_bench,
+                            roofline_table, sec6_extensions, trust_overhead)
     suites = {
         "kernels": lambda: kernel_bench.main(),
-        # gate disabled here: the perf gate (SystemExit) is CI's job; a
+        # gates disabled here: the perf gates (SystemExit) are CI's job; a
         # transient load spike must not abort the remaining suites
         "audit": lambda: audit_kernels.main(min_speedup=0.0),
+        "dispatch": lambda: dispatch_bench.main(gate=False),
         "fig2": lambda: fig2_activation_ratio.main("fmnist"),
         "fig4a": lambda: (fig4a_training.main("fmnist")
                           + fig4a_training.main("cifar")),

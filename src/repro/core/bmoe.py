@@ -47,6 +47,7 @@ from repro.core.reputation import ReputationConfig, ReputationLedger, WorkloadBa
 from repro.core.storage import StorageNetwork, serialize_tree
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.models.moe import capacity_positions
 from repro.trust.audit import pack_audit_batch, pack_audit_batch_multi
 from repro.trust.commitments import chunk_bounds
 from repro.trust.protocol import (TERMINAL_PHASES, AuditJob,
@@ -65,6 +66,17 @@ class BMoEConfig:
     num_classes: int = 10
     lr: float = 0.01
     framework: str = "bmoe"         # bmoe | traditional | optimistic
+    # execution model of the expert layer (paper §II: sparse gating
+    # "lowers computational overhead"):
+    # - "sparse" (default): top-k scatter-dispatch into per-expert
+    #   capacity buckets + grouped GEMM (ops.moe_gemm route) + gather-
+    #   combine — expert compute scales with top_k/num_experts;
+    # - "dense": every expert over the full batch (the pre-sparse
+    #   reference oracle; top-k gating only zeroes combine weights).
+    dispatch: str = "sparse"
+    capacity_factor: float = 1.25   # bucket slots per expert, as a
+    #                                 multiple of the balanced share
+    #                                 B*top_k/num_experts (overflow drops)
     attack: AttackConfig = dataclasses.field(default_factory=AttackConfig)
     pow_difficulty: int = 8
     num_chain_nodes: int = 8
@@ -92,6 +104,7 @@ class BMoESystem:
         self.experts, self._apply_all = ex.make_expert_bank(
             cfg.expert_kind, cfg.num_experts, ke, in_dim=cfg.in_dim,
             in_ch=cfg.in_ch, out=cfg.num_classes)
+        self._apply_grouped = ex.grouped_apply_fn(cfg.expert_kind)
         self.ledger = Ledger()
         self.storage = StorageNetwork(num_nodes=4, replication=2,
                                       seed=cfg.seed)
@@ -166,9 +179,16 @@ class BMoESystem:
                     return jax.vmap(self._apply_one)(p, xd[idx])
                 self._batched_recompute_call = jax.jit(_gather_apply)
         self._train_step = jax.jit(functools.partial(
-            _train_step, cfg=cfg, apply_all=self._apply_all))
+            _train_step, cfg=cfg, apply_all=self._apply_all,
+            apply_grouped=self._apply_grouped))
         self._infer_step = jax.jit(functools.partial(
-            _infer_step, cfg=cfg, apply_all=self._apply_all))
+            _infer_step, cfg=cfg, apply_all=self._apply_all,
+            apply_grouped=self._apply_grouped))
+        # host-side routing re-derivation for sparse commitments: the
+        # committed routing indices are what let auditors re-build the
+        # exact capacity buckets the executor filled
+        self._routing_call = jax.jit(functools.partial(_route_for_commit,
+                                                       cfg=cfg))
 
     # ------------------------------------------------------------ api
     def train_round(self, x, y, *, attack: Optional[AttackConfig] = None):
@@ -198,20 +218,21 @@ class BMoESystem:
             "task": digest_array(np.asarray(x)[:8]),
             "loss": float(metrics["loss"]),
         }
-        # cost ledger in dense-execution units (one unit = one expert
-        # evaluated on one sample; the sim evaluates the full N-expert
-        # bank, and the optimistic commitment covers exactly that), so
+        # cost ledger in expert-evaluation units (one unit = one expert
+        # evaluated on one row of what it actually computes: the full
+        # batch under dense dispatch, its capacity bucket under sparse —
+        # the optimistic commitment covers exactly that buffer), so
         # base/verify/escalate are all measured with the same yardstick
         self.verify_stats["rounds"] += 1
         if cfg.framework == "traditional":
             self.verify_stats["base_evals"] += cfg.top_k * batch  # routed
         else:
-            self.verify_stats["base_evals"] += cfg.num_experts * batch
+            self.verify_stats["base_evals"] += self._exec_evals(batch)
         if cfg.framework == "bmoe":
             # the redundancy mechanism IS the verification: M-1 extra
             # copies of the same execution
             self.verify_stats["verify_evals"] += \
-                (cfg.num_edges - 1) * cfg.num_experts * batch
+                (cfg.num_edges - 1) * self._exec_evals(batch)
             # Step 4-5: edges upload updated experts; hash vote + storage.
             t0 = time.perf_counter()
             payload["trusted_supports"] = metrics["support"].tolist()
@@ -300,21 +321,24 @@ class BMoESystem:
             jnp.int32(executor))
         xin = np.asarray(x if cfg.expert_kind == "cnn"
                          else np.asarray(x).reshape(len(x), -1))
+        row_index, bounds = self._commitment_layout(self.gate, x,
+                                                    xin.shape[0], gate_bias)
         tc = self.trust_cfg
-        bounds = chunk_bounds(xin.shape[0], tc.chunks_per_expert)
-        honest = self._eager_outputs(self.experts, xin, bounds)
+        honest = self._eager_outputs(self.experts, xin, bounds, row_index)
         attacked = bool(np.asarray(mask_e)[executor] > 0)
         state = self._commit_round(proto, rid, executor, honest, attacked,
                                    atk, 1_000_000 + rid,
-                                   digest_array(xin[:8]))
+                                   digest_array(xin[:8]), row_index)
         self._infer_ctx[rid] = {
             "prev": (self.gate, self.experts), "xin": xin, "honest": honest,
             "executor": executor, "mask_e": np.asarray(mask_e), "atk": atk,
             "active": active,
         }
         cids = self._infer_audit_cids.setdefault(rid, [])
-        recompute_fn = self._make_recompute(self.experts, xin, cids)
-        batch_fn = (self._make_batched_recompute(self.experts, xin, cids)
+        recompute_fn = self._make_recompute(self.experts, xin, cids,
+                                            row_index)
+        batch_fn = (self._make_batched_recompute(self.experts, xin, cids,
+                                                 row_index)
                     if tc.audit_backend == "batched" else None)
         proto.schedule_audit(rid, recompute_fn, batch_fn)
         self.infer_log.append({"event": "commit", "round": rid,
@@ -404,25 +428,63 @@ class BMoESystem:
                               payload)
         self.ledger.append(block)
 
+    def _exec_evals(self, batch: int) -> float:
+        """Expert-evaluation cost of one canonical execution: every
+        expert over the full batch (dense) or over its capacity bucket
+        (sparse — the grouped GEMM's real row count, padding included)."""
+        cfg = self.cfg
+        rows = (sparse_capacity(cfg, batch) if cfg.dispatch == "sparse"
+                else batch)
+        return cfg.num_experts * rows
+
     # ------------------------------------------- optimistic verification
-    def _eager_outputs(self, experts, xin, bounds):
+    def _sparse_routing(self, gate, x, gate_bias):
+        """Re-derive the round's routing from the snapshot state and
+        build the ``(N, capacity)`` bucket->task-row index the executor
+        publishes with a sparse commitment.  Empty slots point one past
+        the batch (the zero sentinel row auditors append to the task),
+        so a leaf recompute is a pure gather + grouped apply."""
+        cfg = self.cfg
+        eid, pos, keep = (np.asarray(a) for a in
+                          self._routing_call(gate, x, gate_bias))
+        batch = len(x)
+        capacity = sparse_capacity(cfg, batch)
+        row_index = np.full((cfg.num_experts, capacity), batch, np.int32)
+        tok = np.repeat(np.arange(batch, dtype=np.int32), cfg.top_k)
+        row_index[eid[keep], pos[keep]] = tok[keep]
+        return row_index, capacity
+
+    @staticmethod
+    def _pad_task(xin, row_index):
+        """The auditors' task view: under sparse dispatch, the batch plus
+        one trailing zero row (what empty bucket slots recompute from)."""
+        if row_index is None:
+            return xin
+        return np.concatenate([xin, np.zeros_like(xin[:1])], axis=0)
+
+    def _eager_outputs(self, experts, xin, bounds, row_index=None):
         """The executor's commitment-building pass: every expert's output
         computed through the same recompute path the auditors use, so
         honest leaves recompute bit-identically.  For the mlp bank every
         (expert, chunk) leaf goes through ONE grouped ``audit_mlp`` call
         (the auditors' own kernel); other expert kinds fall back to the
-        per-expert chunked apply."""
+        per-expert chunked apply.  With ``row_index`` (sparse dispatch)
+        the chunks tile each expert's capacity bucket and the task rows
+        come from the committed routing, so the pass computes — and the
+        commitment covers — only the bucketed buffers."""
         cfg = self.cfg
         n_chunks = len(bounds) - 1
+        xpad = self._pad_task(xin, row_index)
         if cfg.expert_kind == "mlp" and self.protocol is not None:
             slices = [slice(bounds[c], bounds[c + 1])
                       for c in range(n_chunks)]
             work = [(e, sl) for e in range(cfg.num_experts)
                     for sl in slices]            # (e, c) row-major = leaf order
             idx, gid, n = pack_audit_batch([e for e, _ in work],
-                                           [sl for _, sl in work])
+                                           [sl for _, sl in work],
+                                           row_map=row_index)
             out = np.asarray(self._batched_recompute_call(
-                experts, jnp.asarray(xin), jnp.asarray(idx),
+                experts, jnp.asarray(xpad), jnp.asarray(idx),
                 jnp.asarray(gid)))[:n]
             parts = [np.concatenate(
                 [out[e * n_chunks + c][:bounds[c + 1] - bounds[c]]
@@ -433,23 +495,32 @@ class BMoESystem:
         for e in range(cfg.num_experts):
             p_e = jax.tree_util.tree_map(lambda a: a[e], experts)
             chunks = [np.asarray(self._apply_one(
-                p_e, jnp.asarray(xin[bounds[c]:bounds[c + 1]])))
+                p_e, jnp.asarray(xpad[bounds[c]:bounds[c + 1]]
+                                 if row_index is None
+                                 else xpad[row_index[e,
+                                                     bounds[c]:bounds[c + 1]]])))
                 for c in range(n_chunks)]
             parts.append(np.concatenate(chunks, axis=0))
         return np.stack(parts)
 
-    def _make_recompute(self, experts, xin, cids: List[str]):
+    def _make_recompute(self, experts, xin, cids: List[str],
+                        row_index=None):
         """Auditor-side recompute: fetch the sampled expert from the
         storage layer by CID (content-addressed, so a tampered replica is
         self-evident) and recompute the audited chunk on the published
-        task.  Single-process caveat: the executor and auditor share
-        memory here, so the put/get round-trip exercises the mechanism
-        (replication, CID verification), not an adversarial network.
-        Evidence blobs live only while the round's challenge window is
-        open — they are pruned from storage once the round finalizes or
-        a court verdict resolves it (the compact fraud proofs remain in
-        the round state)."""
+        task.  Under sparse dispatch the audited chunk is a slice of the
+        expert's capacity bucket and the committed ``row_index`` maps its
+        slots back to task rows (empty slots gather the zero sentinel) —
+        auditors re-derive the executor's buckets from the commitment,
+        never from the gate.  Single-process caveat: the executor and
+        auditor share memory here, so the put/get round-trip exercises
+        the mechanism (replication, CID verification), not an adversarial
+        network.  Evidence blobs live only while the round's challenge
+        window is open — they are pruned from storage once the round
+        finalizes or a court verdict resolves it (the compact fraud
+        proofs remain in the round state)."""
         cache: Dict[int, object] = {}
+        xpad = self._pad_task(xin, row_index)
 
         def recompute(e: int, sl: slice):
             if e not in cache:
@@ -457,11 +528,13 @@ class BMoESystem:
                 cid = self.storage.put(serialize_tree(p_e))
                 cache[e] = self.storage.get_tree(cid, p_e)
                 cids.append(cid)
-            return np.asarray(self._apply_one(cache[e], jnp.asarray(xin[sl])))
+            rows = xpad[sl] if row_index is None else xpad[row_index[e, sl]]
+            return np.asarray(self._apply_one(cache[e], jnp.asarray(rows)))
 
         return recompute
 
-    def _make_batched_recompute(self, experts, xin, cids: List[str]):
+    def _make_batched_recompute(self, experts, xin, cids: List[str],
+                                row_index=None):
         """Batched auditor recompute (``BatchRecomputeFn``): the same
         fetch-by-CID semantics as ``_make_recompute`` — one storage
         round-trip per sampled expert — but every sampled chunk of the
@@ -498,8 +571,9 @@ class BMoESystem:
             for e in sorted({int(e) for e in expert_ids}):
                 fetch(e)
             if not xd_cache:
-                xd_cache.append(jnp.asarray(xin))
-            idx, gid, n = pack_audit_batch(expert_ids, slices)
+                xd_cache.append(jnp.asarray(self._pad_task(xin, row_index)))
+            idx, gid, n = pack_audit_batch(expert_ids, slices,
+                                           row_map=row_index)
             out = self._batched_recompute_call(experts, xd_cache[0],
                                                jnp.asarray(idx),
                                                jnp.asarray(gid))
@@ -508,16 +582,27 @@ class BMoESystem:
         return batch_recompute
 
     def _commit_round(self, protocol, rid, executor, honest, attacked, atk,
-                      seed_salt, task_digest):
+                      seed_salt, task_digest, row_index=None):
         """Build the executor's claimed tensor (corrupted iff it attacks)
-        and publish the round commitment."""
+        and publish the round commitment — over the dense ``(N, B, C)``
+        outputs, or (sparse dispatch) the capacity-bucketed buffers plus
+        the routing indices auditors re-derive the buckets from."""
         claimed = honest
         if attacked:
             rng = np.random.default_rng(self.cfg.seed * 7919 + seed_salt)
             claimed = honest + atk.noise_std * rng.standard_normal(
                 honest.shape).astype(honest.dtype)
         return protocol.commit(rid, executor, claimed,
-                               task_digest=task_digest)
+                               task_digest=task_digest, row_index=row_index)
+
+    def _commitment_layout(self, gate, x, batch: int, gate_bias):
+        """(row_index, bounds) of the round's commitment: bucket-chunk
+        leaves under sparse dispatch, batch-chunk leaves under dense."""
+        tc = self.trust_cfg
+        if self.cfg.dispatch == "sparse":
+            row_index, capacity = self._sparse_routing(gate, x, gate_bias)
+            return row_index, chunk_bounds(capacity, tc.chunks_per_expert)
+        return None, chunk_bounds(batch, tc.chunks_per_expert)
 
     def _court_publish(self, ctx, claimed, seed_salt):
         """The dispute court's input: every edge's copy of every expert's
@@ -559,10 +644,13 @@ class BMoESystem:
         # repeat round 0's bank and contribute zero task rows; no sample
         # ever indexes them).  Single-round drains keep the unpadded
         # per-round layout the synchronous scheduler always uses.
+        row_maps = [c.row_index for c in coms]
         slots = (self.trust_cfg.challenge_window + 1 if len(jobs) > 1
                  else 1)
         slots = max(slots, len(jobs))
-        bmax = max(len(x) for x in xins)
+        # +1: every round's slot ends with at least one zero row — the
+        # sentinel empty bucket slots of a sparse commitment gather from
+        bmax = max(len(x) for x in xins) + 1
         row_off = np.arange(slots + 1) * bmax
         pad_banks = banks + [banks[0]] * (slots - len(banks))
         stacked_bank = jax.tree_util.tree_map(
@@ -596,7 +684,8 @@ class BMoESystem:
                 bucket *= 2
             idx, gid, n = pack_audit_batch_multi(slot_ids, experts, slices,
                                                  row_off, cfg.num_experts,
-                                                 bucket=bucket)
+                                                 bucket=bucket,
+                                                 row_maps=row_maps)
             out = self._batched_recompute_call(stacked_bank, xcat,
                                                jnp.asarray(idx),
                                                jnp.asarray(gid))
@@ -633,11 +722,12 @@ class BMoESystem:
             reports = reports_by_rid[job.round_id]
             protocol.apply_reports(job.round_id, reports, job.recompute_fn)
             audited = sum(r.recomputed_leaves for r in reports)
-            batch_r = len(ctx_store[job.round_id]["xin"])
-            chunks = protocol.rounds[job.round_id].commitment.chunks_per_expert
+            com = protocol.rounds[job.round_id].commitment
             summary["audited_leaves"] += audited
+            # rows_per_expert is the capacity bucket under sparse
+            # dispatch: audit recompute shrinks with execution compute
             self.verify_stats["verify_evals"] += \
-                audited * batch_r / max(chunks, 1)
+                audited * com.rows_per_expert / max(com.chunks_per_expert, 1)
         if tc.scheduling == "pipelined":
             # verifier-pool work: concurrent with later rounds in
             # deployment, so off the critical path (courts + chain
@@ -667,7 +757,8 @@ class BMoESystem:
             state = protocol.resolve(rid, verdict)
             summary["fraud_proofs"] += len(state.proofs)
             self.verify_stats["escalate_evals"] += \
-                cfg.num_edges * cfg.num_experts * len(ctx["xin"])
+                cfg.num_edges * cfg.num_experts \
+                * state.commitment.rows_per_expert
             for cid in cid_store.pop(rid, []):
                 self.storage.discard(cid)
             if state.phase is RoundPhase.ROLLED_BACK:
@@ -711,7 +802,7 @@ class BMoESystem:
                 ctx["active"], jnp.int32(ctx["executor"]))
             metrics = jax.tree_util.tree_map(np.asarray, metrics)
             self.verify_stats["base_evals"] += \
-                cfg.num_experts * len(ctx["xin"])
+                self._exec_evals(len(ctx["xin"]))
         return metrics if chain and chain[-1] == self.round else None
 
     def _prune_closed_rounds(self, protocol, ctx_store, cid_store):
@@ -742,13 +833,16 @@ class BMoESystem:
         xin = np.asarray(x if cfg.expert_kind == "cnn"
                          else np.asarray(x).reshape(len(x), -1))
         batch = xin.shape[0]
-        bounds = chunk_bounds(batch, tc.chunks_per_expert)
-        honest = self._eager_outputs(prev[1], xin, bounds)
+        row_index, bounds = self._commitment_layout(prev[0], x, batch,
+                                                    gate_bias)
+        honest = self._eager_outputs(prev[1], xin, bounds, row_index)
         attacked = bool(np.asarray(mask_e)[executor] > 0)
         state = self._commit_round(self.protocol, self.round, executor,
                                    honest, attacked, atk, self.round,
-                                   payload["task"])
+                                   payload["task"], row_index)
         payload["commit_root"] = state.commitment.root[:16]
+        if state.commitment.routing_digest:
+            payload["routing"] = state.commitment.routing_digest[:16]
         payload["executor"] = executor
         self._round_ctx[self.round] = {
             "prev": prev, "x": x, "y": y, "xin": xin, "honest": honest,
@@ -757,8 +851,9 @@ class BMoESystem:
             "gate_bias": gate_bias, "active": active,
         }
         cids = self._audit_cids.setdefault(self.round, [])
-        recompute_fn = self._make_recompute(prev[1], xin, cids)
-        batch_fn = (self._make_batched_recompute(prev[1], xin, cids)
+        recompute_fn = self._make_recompute(prev[1], xin, cids, row_index)
+        batch_fn = (self._make_batched_recompute(prev[1], xin, cids,
+                                                 row_index)
                     if tc.audit_backend == "batched" else None)
         self.protocol.schedule_audit(self.round, recompute_fn, batch_fn)
 
@@ -910,17 +1005,57 @@ def _flatten_for_gate(x):
     return x.reshape(x.shape[0], -1)
 
 
-def _moe_forward(gate, experts, x, mask_e, key, noise_std, colluding, cfg,
-                 apply_all, gate_bias=None, active=None, executor=0):
-    """Shared forward: returns (trusted_out (B,C), weights (B,N),
-    activation (N,), support (N,), flags (N,M))."""
-    xin = x if cfg.expert_kind == "cnn" else _flatten_for_gate(x)
-    logits = ex.gate_apply(gate, _flatten_for_gate(x))
-    if gate_bias is not None:  # §VI-C workload-balance bias (loss-free)
-        logits = logits + jax.lax.stop_gradient(gate_bias)[None, :]
-    weights, topi = ex.sparse_gate_weights(logits, cfg.top_k)
-    outs = apply_all(experts, xin)                      # (N, B, C)
+def sparse_capacity(cfg, batch: int) -> int:
+    """Bucket slots per expert under sparse dispatch: the balanced share
+    ``batch*top_k/num_experts`` scaled by ``capacity_factor``, rounded up
+    to a multiple of 8 (GEMM-tile friendly) and capped at ``batch`` (an
+    expert can receive at most one slot per token: top-k indices are
+    distinct per token)."""
+    cap = int(np.ceil(cfg.capacity_factor * batch * cfg.top_k
+                      / cfg.num_experts))
+    cap = min(-(-cap // 8) * 8, batch)
+    return max(cap, 1)
 
+
+def _sparse_dispatch(xin, topi, cfg, capacity):
+    """Scatter the top-k assignments into per-expert capacity buckets.
+
+    Returns (buf (N, capacity, *xin.shape[1:]), eid (B*k,), pos (B*k,),
+    keep (B*k,)): slot ``pos[j]`` of expert ``eid[j]``'s bucket holds
+    token ``j // k``'s input (overflowing assignments are dropped — the
+    bucket row stays zero and the combine masks the slot out)."""
+    B = xin.shape[0]
+    eid = topi.reshape(-1)                              # (B*k,) row-major
+    pos, keep, _ = capacity_positions(eid[None], cfg.num_experts, capacity)
+    pos, keep = pos[0], keep[0]
+    posc = jnp.where(keep, pos, capacity - 1)           # clamp drops
+    kshape = (B * cfg.top_k,) + (1,) * (xin.ndim - 1)
+    gath = jnp.repeat(xin, cfg.top_k, axis=0) \
+        * keep.reshape(kshape).astype(xin.dtype)
+    buf = jnp.zeros((cfg.num_experts, capacity) + xin.shape[1:],
+                    xin.dtype).at[eid, posc].add(gath)
+    return buf, eid, posc, keep
+
+
+def _route_for_commit(gate, x, gate_bias, *, cfg):
+    """The routing the executor publishes with a sparse commitment:
+    exactly the gate + top-k + capacity-bucket assignment the forward
+    uses, re-derived from the round's snapshot state."""
+    flat = _flatten_for_gate(x)
+    logits = ex.gate_apply(gate, flat) + gate_bias[None, :]
+    _, topi = ex.sparse_gate_weights(logits, cfg.top_k)
+    capacity = sparse_capacity(cfg, flat.shape[0])
+    eid = topi.reshape(-1)
+    pos, keep, _ = capacity_positions(eid[None], cfg.num_experts, capacity)
+    return eid, pos[0], keep[0]
+
+
+def _trust_outputs(outs, mask_e, key, noise_std, colluding, cfg, active,
+                   executor):
+    """Framework-specific corruption + consensus over the per-expert
+    output buffer ``outs`` (N, R, ...) — R is the full batch under dense
+    dispatch, the capacity bucket under sparse (the vote and the attack
+    surface shrink with the compute)."""
     if cfg.framework == "optimistic":
         # single-executor optimistic path: the round's result is whatever
         # the rotating executor published (corrupted iff it attacks);
@@ -934,59 +1069,98 @@ def _moe_forward(gate, experts, x, mask_e, key, noise_std, colluding, cfg,
         # edge i employs expert i: manipulation hits expert i directly
         from repro.core.attacks import manipulate_single
         mask_n = mask_e[:cfg.num_experts]
-        corrupted = manipulate_single(outs, mask_n, noise_std, key)
-        trusted = corrupted                              # no consensus
+        trusted = manipulate_single(outs, mask_n, noise_std, key)
         support = jnp.full((cfg.num_experts,), 1.0)
         flags = jnp.ones((cfg.num_experts, cfg.num_edges), jnp.int32)
     else:
-        # redundancy: every edge publishes every expert's result
-        pub = jnp.broadcast_to(outs[:, None], (cfg.num_experts,
-                                               cfg.num_edges) + outs.shape[1:])
-        # colluding vs independent manipulation, traced under jit
-        noise_c = jax.random.normal(key, (cfg.num_experts, 1) + outs.shape[1:],
-                                    outs.dtype)
-        noise_i = jax.random.normal(jax.random.fold_in(key, 7), pub.shape,
-                                    outs.dtype)
-        noise = jnp.where(colluding, jnp.broadcast_to(noise_c, pub.shape),
-                          noise_i)
-        mshape = (1, cfg.num_edges) + (1,) * (pub.ndim - 2)
-        pub = pub + noise_std * noise * mask_e.reshape(mshape)
+        # redundancy: every edge publishes every expert's result.  Each
+        # edge's manipulated copy draws from its own folded key (the
+        # colluding coalition folds a shared id, publishing identical
+        # results), so only the (N, M, ...) publication tensor the vote
+        # needs is materialized — not separate colluding + independent
+        # noise tensors plus a full-size select.
+        def edge_copy(m):
+            fid = jnp.where(colluding, 0, m)
+            noise = jax.random.normal(jax.random.fold_in(key, fid),
+                                      outs.shape, outs.dtype)
+            return outs + noise_std * noise * mask_e[m]
+
+        pub = jnp.moveaxis(jax.vmap(edge_copy)(jnp.arange(cfg.num_edges)),
+                           0, 1)                         # (N, M, ...)
         # Step 3: distributed consensus = majority vote over the M copies
         # (reputation-excluded edges barred from electorate, §VI-D)
         act = active if active is not None else jnp.ones(cfg.num_edges)
         trusted, support, flags = kref.redundancy_vote_masked_ref(pub, act)
+    return trusted, support, flags
+
+
+def _moe_forward(gate, experts, x, mask_e, key, noise_std, colluding, cfg,
+                 apply_all, apply_grouped, gate_bias=None, active=None,
+                 executor=0):
+    """Shared forward: returns (trusted_out (B,C), weights (B,N),
+    activation (N,), support (N,), flags (N,M), logits (B,N),
+    dropped ())."""
+    flat = _flatten_for_gate(x)
+    xin = x if cfg.expert_kind == "cnn" else flat
+    logits = ex.gate_apply(gate, flat)
+    if gate_bias is not None:  # §VI-C workload-balance bias (loss-free)
+        logits = logits + jax.lax.stop_gradient(gate_bias)[None, :]
+    weights, topi = ex.sparse_gate_weights(logits, cfg.top_k)
+    B = xin.shape[0]
+
+    if cfg.dispatch == "sparse":
+        # top-k scatter-dispatch: only routed tokens reach an expert
+        capacity = sparse_capacity(cfg, B)
+        buf, eid, posc, keep = _sparse_dispatch(xin, topi, cfg, capacity)
+        outs = apply_grouped(experts, buf)              # (N, cap, C)
+        dropped = (B * cfg.top_k) - keep.sum().astype(jnp.float32)
+    else:
+        outs = apply_all(experts, xin)                  # (N, B, C)
+        dropped = jnp.zeros((), jnp.float32)
+
+    trusted, support, flags = _trust_outputs(outs, mask_e, key, noise_std,
+                                             colluding, cfg, active,
+                                             executor)
 
     # aggregate with gate weights (paper: weighted sum over top-K)
-    y = jnp.einsum("bn,nbc->bc", weights, trusted)
+    if cfg.dispatch == "sparse":
+        yk = trusted[eid, posc]                         # (B*k, C)
+        wk = jnp.take_along_axis(weights, topi, axis=1).reshape(-1)
+        wk = wk * keep.astype(wk.dtype)                 # drops contribute 0
+        y = (yk * wk[:, None]).reshape(B, cfg.top_k, -1).sum(axis=1)
+    else:
+        y = jnp.einsum("bn,nbc->bc", weights, trusted)
     activation = (weights > 0).sum(axis=0).astype(jnp.float32)
-    return y, weights, activation, support, flags, logits
+    return y, weights, activation, support, flags, logits, dropped
 
 
 def _train_step(gate, experts, x, y, mask_e, key, noise_std, colluding,
-                gate_bias, active, executor, *, cfg, apply_all):
+                gate_bias, active, executor, *, cfg, apply_all,
+                apply_grouped):
     def loss_fn(params):
         gate_p, experts_p = params
-        out, w, activation, support, flags, _ = _moe_forward(
+        out, w, activation, support, flags, _, dropped = _moe_forward(
             gate_p, experts_p, x, mask_e, key, noise_std, colluding, cfg,
-            apply_all, gate_bias, active, executor)
+            apply_all, apply_grouped, gate_bias, active, executor)
         logp = jax.nn.log_softmax(out, axis=-1)
         loss = -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
-        return loss, (activation, support, flags)
+        return loss, (activation, support, flags, dropped)
 
-    (loss, (activation, support, flags)), grads = jax.value_and_grad(
-        loss_fn, has_aux=True)((gate, experts))
+    (loss, (activation, support, flags, dropped)), grads = \
+        jax.value_and_grad(loss_fn, has_aux=True)((gate, experts))
     new_gate = jax.tree_util.tree_map(lambda p, g: p - cfg.lr * g, gate,
                                       grads[0])
     new_experts = jax.tree_util.tree_map(lambda p, g: p - cfg.lr * g,
                                          experts, grads[1])
     metrics = {"loss": loss, "activation": activation, "support": support,
-               "flags": flags}
+               "flags": flags, "dropped": dropped}
     return new_gate, new_experts, metrics
 
 
 def _infer_step(gate, experts, x, mask_e, key, noise_std, colluding,
-                gate_bias, active, executor, *, cfg, apply_all):
-    out, w, activation, support, flags, _ = _moe_forward(
+                gate_bias, active, executor, *, cfg, apply_all,
+                apply_grouped):
+    out, w, activation, support, flags, _, _ = _moe_forward(
         gate, experts, x, mask_e, key, noise_std, colluding, cfg, apply_all,
-        gate_bias, active, executor)
+        apply_grouped, gate_bias, active, executor)
     return out, activation, support

@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kops
 from repro.models.builder import Leaf, materialize, stack
 
 
@@ -68,6 +69,55 @@ def cnn_expert_apply(params, x):
     h = h.reshape(h.shape[0], -1)
     h = jax.nn.relu(h @ params["w1"] + params["b1"])
     return h @ params["w2"] + params["b2"]
+
+
+@jax.custom_vjp
+def mlp_expert_apply_grouped(params, buf):
+    """buf: (N, C, d) capacity buckets -> (N, C, out): every expert's
+    2-layer MLP applied to its own bucket through the grouped GEMM route
+    (``ops.moe_gemm``: Pallas kernel on TPU, einsum oracle elsewhere).
+
+    The Pallas call has no built-in autodiff rule, so the backward pass
+    is supplied explicitly (the grouped-GEMM transposes) — this is what
+    lets the B-MoE *train* step run its hot path through the kernel.
+    """
+    h = jax.nn.relu(kops.moe_gemm(buf, params["w1"])
+                    + params["b1"][:, None, :])
+    return kops.moe_gemm(h, params["w2"]) + params["b2"][:, None, :]
+
+
+def _mlp_grouped_fwd(params, buf):
+    h = jax.nn.relu(kops.moe_gemm(buf, params["w1"])
+                    + params["b1"][:, None, :])
+    out = kops.moe_gemm(h, params["w2"]) + params["b2"][:, None, :]
+    return out, (params["w1"], params["w2"], buf, h)
+
+
+def _mlp_grouped_bwd(res, g):
+    w1, w2, buf, h = res
+    dw2 = jnp.einsum("ech,eco->eho", h, g)
+    db2 = g.sum(axis=1)
+    dh = jnp.einsum("eco,eho->ech", g, w2) * (h > 0)
+    dw1 = jnp.einsum("ecd,ech->edh", buf, dh)
+    db1 = dh.sum(axis=1)
+    dbuf = jnp.einsum("ech,edh->ecd", dh, w1)
+    return ({"w1": dw1, "b1": db1, "w2": dw2, "b2": db2}, dbuf)
+
+
+mlp_expert_apply_grouped.defvjp(_mlp_grouped_fwd, _mlp_grouped_bwd)
+
+
+def grouped_apply_fn(kind: str):
+    """apply(stacked_params, buf (N, C, ...)) -> (N, C, out): each expert
+    on its own capacity bucket — the sparse-dispatch counterpart of
+    ``apply_all``.  The mlp bank routes through the grouped GEMM kernel;
+    the cnn bank vmaps the per-expert apply over the bucket axis (still
+    sparse: C = capacity rows instead of the full batch)."""
+    if kind == "mlp":
+        return mlp_expert_apply_grouped
+    if kind == "cnn":
+        return jax.vmap(cnn_expert_apply)
+    raise ValueError(kind)
 
 
 def make_expert_bank(kind: str, num_experts: int, key, *, in_dim: int = 784,

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _audit_mlp_kernel(gid_ref, x_ref, w1_ref, b1_ref, w2_ref, b2_ref,
                       o_ref, h_ref):
@@ -54,13 +56,14 @@ def _pad_axis(x, axis: int, mult: int):
 
 
 def audit_mlp(params, x: jax.Array, gid: jax.Array, *, block_d: int = 256,
-              interpret: bool = True) -> jax.Array:
+              interpret: bool | None = None) -> jax.Array:
     """Fused grouped 2-layer MLP: out[s] = mlp(params[gid[s]], x[s]).
 
     params: dict with stacked ``w1 (E, d, h)``, ``b1 (E, h)``,
     ``w2 (E, h, o)``, ``b2 (E, o)``; x: (S, C, d) padded sample chunks;
     gid: (S,) int32 expert index per sample.  Returns (S, C, o) f32.
     """
+    interpret = resolve_interpret(interpret)
     w1, b1, w2, b2 = params["w1"], params["b1"], params["w2"], params["b2"]
     S, C, d = x.shape
     o = w2.shape[-1]

@@ -1,0 +1,40 @@
+"""Central kernel-backend selection.
+
+Every Pallas kernel in this package takes an ``interpret`` flag; before
+this module existed each kernel hardcoded ``interpret=True`` as its
+default, so a TPU run that called a kernel directly (not through the
+``ops`` wrappers) silently interpreted the kernel body instead of
+compiling it.  All kernels now default ``interpret=None`` and resolve it
+here, so there is exactly ONE place that decides how a kernel executes:
+
+- ``REPRO_KERNEL_BACKEND`` env var, when set, wins ("ref" | "pallas" |
+  "interpret");
+- otherwise "pallas" (compiled) on TPU, "ref" elsewhere.
+
+``ops`` keeps its per-call ``backend=`` override on top of this default.
+"""
+from __future__ import annotations
+
+import os
+
+
+def default_backend() -> str:
+    env = os.environ.get("REPRO_KERNEL_BACKEND")
+    if env:
+        return env
+    try:
+        import jax
+        if jax.devices()[0].platform == "tpu":
+            return "pallas"
+    except Exception:
+        pass
+    return "ref"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve a kernel's ``interpret`` flag: an explicit value wins;
+    ``None`` defers to ``default_backend()`` — compiled on a "pallas"
+    backend, interpreted everywhere else (the CPU validation mode)."""
+    if interpret is None:
+        return default_backend() != "pallas"
+    return bool(interpret)

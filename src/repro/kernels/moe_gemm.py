@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _mm_kernel(x_ref, w_ref, o_ref):
     k = pl.program_id(3)
@@ -26,9 +28,10 @@ def _mm_kernel(x_ref, w_ref, o_ref):
 
 def moe_gemm(buf: jax.Array, w: jax.Array, *, block_c: int = 128,
              block_d: int = 128, block_f: int = 128,
-             interpret: bool = True) -> jax.Array:
+             interpret: bool | None = None) -> jax.Array:
     """buf: (E, C, d), w: (E, d, f) -> (E, C, f) (f32 accumulate, cast to
     buf dtype)."""
+    interpret = resolve_interpret(interpret)
     E, C, d = buf.shape
     _, _, f = w.shape
     block_c, block_d, block_f = (min(block_c, C), min(block_d, d),

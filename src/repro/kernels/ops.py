@@ -11,8 +11,6 @@ Set REPRO_KERNEL_BACKEND to override the default.
 """
 from __future__ import annotations
 
-import os
-
 import jax
 import jax.numpy as jnp
 
@@ -23,18 +21,10 @@ from repro.kernels import redundancy_vote as _rv
 from repro.kernels import rglru_scan as _rg
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import ref
+from repro.kernels.backend import default_backend
 
-
-def default_backend() -> str:
-    env = os.environ.get("REPRO_KERNEL_BACKEND")
-    if env:
-        return env
-    try:
-        if jax.devices()[0].platform == "tpu":
-            return "pallas"
-    except Exception:
-        pass
-    return "ref"
+__all__ = ["default_backend", "redundancy_vote", "moe_gemm", "audit_mlp",
+           "flash_attention", "ssd_scan", "rglru_scan"]
 
 
 # ------------------------------------------------------ redundancy vote

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 DEFAULT_TILE = 1024
 
 
@@ -36,7 +38,7 @@ def _agree_kernel(pub_ref, out_ref, *, atol: float):
 
 def pairwise_agreement(pub: jax.Array, *, atol: float = 0.0,
                        tile: int = DEFAULT_TILE,
-                       interpret: bool = True) -> jax.Array:
+                       interpret: bool | None = None) -> jax.Array:
     """pub: (E, M, T) -> (E, M, M) int32 agreement counts.
 
     Padding note: T is zero-padded to a tile multiple; padded positions
@@ -44,6 +46,7 @@ def pairwise_agreement(pub: jax.Array, *, atol: float = 0.0,
     for the argmax and corrected in ops.redundancy_vote's exact-match
     test (counts == padded_T  <=>  agree on all real elements).
     """
+    interpret = resolve_interpret(interpret)
     E, M, T = pub.shape
     tile = min(tile, max(T, 1))
     pad = (-T) % tile

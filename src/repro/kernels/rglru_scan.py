@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _rglru_kernel(a_ref, b_ref, y_ref, h_ref, *, Sq):
     s = pl.program_id(2)
@@ -37,8 +39,9 @@ def _rglru_kernel(a_ref, b_ref, y_ref, h_ref, *, Sq):
 
 
 def rglru_scan_pallas(a, b, *, seq_block=128, chan_block=256,
-                      interpret=True):
+                      interpret=None):
     """a, b: (B, S, C) f32 -> h: (B, S, C)."""
+    interpret = resolve_interpret(interpret)
     B, S, C = a.shape
     Sq = min(seq_block, S)
     Ct = min(chan_block, C)

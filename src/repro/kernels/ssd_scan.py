@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _ssd_kernel(x_ref, dt_ref, da_ref, b_ref, c_ref, y_ref, state_ref, *,
                 Q):
@@ -48,9 +50,10 @@ def _ssd_kernel(x_ref, dt_ref, da_ref, b_ref, c_ref, y_ref, state_ref, *,
     state_ref[...] = jnp.exp(total) * state + ds
 
 
-def ssd_scan(x, dt, A, Bmat, Cmat, *, chunk=128, interpret=True):
+def ssd_scan(x, dt, A, Bmat, Cmat, *, chunk=128, interpret=None):
     """x: (B, S, H, P); dt: (B, S, H); A: (H,); Bmat/Cmat: (B, S, N).
     Returns y: (B, S, H, P) (f32).  State starts at zero (training)."""
+    interpret = resolve_interpret(interpret)
     Bsz, S, H, P = x.shape
     N = Bmat.shape[-1]
     Q = min(chunk, S)

@@ -46,6 +46,26 @@ def capacity_for(cfg, tokens_per_group: int) -> int:
     return max(cap, 1)
 
 
+def capacity_positions(expert_id, num_experts: int, capacity: int):
+    """Capacity-bucket slot assignment — the shared dispatch machinery.
+
+    ``expert_id``: (G, P) int — expert chosen at each of P dispatch
+    positions, independently per group G (a batch row here; the single
+    all-batch group in the B-MoE system's sparse dispatch).  Returns
+    ``(position, keep, onehot)``: ``position[g, p]`` counts earlier
+    same-expert assignments within the group (the slot in that expert's
+    capacity bucket), ``keep = position < capacity`` marks assignments
+    that fit, and ``onehot`` is the (G, P, E) int32 assignment tensor the
+    positions were computed from (returned so callers needing per-expert
+    statistics — the router aux loss — don't rebuild it).  Overflowing
+    assignments are *dropped*, never mis-routed.
+    """
+    onehot = jax.nn.one_hot(expert_id, num_experts, dtype=jnp.int32)
+    pos_all = jnp.cumsum(onehot, axis=1) - onehot       # (G, P, E)
+    position = (pos_all * onehot).sum(-1)
+    return position, position < capacity, onehot
+
+
 def route(logits, k: int, capacity: int, num_real: int = 0):
     """logits: (B, S, E).  Per-row top-k routing with capacity buckets.
 
@@ -62,10 +82,10 @@ def route(logits, k: int, capacity: int, num_real: int = 0):
     weights, expert_id = jax.lax.top_k(probs, k)
     weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
 
-    onehot = jax.nn.one_hot(expert_id.reshape(B, S * k), E, dtype=jnp.int32)
-    pos_all = jnp.cumsum(onehot, axis=1) - onehot       # (B, S*k, E)
-    position = (pos_all * onehot).sum(-1).reshape(B, S, k)
-    keep = position < capacity
+    position, keep, onehot = capacity_positions(
+        expert_id.reshape(B, S * k), E, capacity)
+    position = position.reshape(B, S, k)
+    keep = keep.reshape(B, S, k)
 
     frac_tokens = onehot.sum(axis=(0, 1)).astype(jnp.float32) / (B * S * k)
     frac_probs = probs.mean(axis=(0, 1))

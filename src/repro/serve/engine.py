@@ -129,11 +129,14 @@ class ServingEngine:
         self._window = (ChallengeWindow(trust.challenge_window)
                         if trust is not None else None)
         # audit_rate is the pool-wide sampled fraction (same contract as
-        # OptimisticProtocol): each verifier draws its share
+        # OptimisticProtocol): each verifier draws its stake-weighted
+        # share, and session re-audits catch rubber-stampers too
         self._auditors = (VerifierPool(
             trust.num_verifiers,
             trust.audit_rate / max(trust.num_verifiers, 1),
-            trust.lazy_verifier_prob, trust.seed)
+            trust.lazy_verifier_prob, trust.seed,
+            stakes=trust.verifier_stakes, reaudit_rate=trust.reaudit_rate,
+            verifier_slash_fraction=trust.verifier_slash_fraction)
             if trust is not None else None)
         self._finalized: set = set()
         # deadline-ordered auto-audit queue: a sealed session's audit is
@@ -352,6 +355,16 @@ class ServingEngine:
 
         [report] = self._auditors.audit_batched(com, batch_recompute,
                                                 verifiers=[verifier])
+
+        def recompute(e: int, sl: slice):
+            return np.array([[request_id, rec.ticks[sl.start],
+                              rec.tokens[sl.start]]], np.int64)
+
+        # second-layer lottery (reaudit_rate > 0): spot-check this
+        # verifier's salted recompute attestations — a rubber-stamping
+        # session auditor is slashed out of future lotteries just like a
+        # training-round one
+        self._auditors.reaudit(com, [report], recompute)
         sampled = report.sampled_leaves
         mismatches = [p.leaf_index for p in report.fraud_proofs]
         # Merkle-path check against the SEALED root: catches a consistent

@@ -14,6 +14,19 @@ independent honest verifiers the exponent becomes ``k*v``.
 Lazy verifiers (rubber-stampers that skip their recompute) are modeled
 with ``lazy_prob`` — they sample leaves but never raise proofs, which is
 how audit-evasion scenarios are expressed.
+
+The lottery is *stake-weighted* when the pool is given per-verifier
+``stakes``: verifier ``v`` samples each leaf with probability
+``pool_rate * stake_v / sum(stakes)`` (``pool_rate`` = the per-verifier
+base rate x the pool size), so the pool-wide expected sampled fraction
+is conserved while high-stake verifiers carry proportionally more of the
+audit load — the simulation analogue of a stake-weighted VRF lottery.
+Lazy verifiers are *caught by re-audit*: every recomputing verifier must
+attest ``H(salt_{round,verifier} || recomputed_chunk)`` per sampled leaf
+(``attestation_digest``); the salt makes the attestation underivable
+from the executor's published leaf digests, so a rubber-stamper's echo
+fails any spot-check — even on honest rounds — and its stake is slashed
+(``reaudit``), shrinking its share of every future lottery.
 """
 from __future__ import annotations
 
@@ -22,6 +35,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.ledger import digest_bytes
 from repro.trust.commitments import (MerklePath, MerkleTree, RoundCommitment,
                                      leaf_digest, leaf_digest_batch)
 
@@ -48,7 +62,8 @@ MultiBatchRecomputeFn = Callable[
 
 
 def pack_audit_batch(expert_ids: Sequence[int], slices: Sequence[slice],
-                     bucket: int = 4):
+                     bucket: int = 4,
+                     row_map: Optional[np.ndarray] = None):
     """Pack a deduped (expert, slice) work list for a grouped recompute.
 
     Returns ``(idx, gid, n)``: ``idx`` is ``(Sp, Cmax)`` int32 batch-row
@@ -56,6 +71,12 @@ def pack_audit_batch(expert_ids: Sequence[int], slices: Sequence[slice],
     padding, trimmed before hashing), ``gid`` the ``(Sp,)`` int32 expert
     per sample, ``n`` the real sample count.  ``Sp`` buckets ``n`` up to
     a multiple of ``bucket`` so a jitted consumer retraces O(1) times.
+
+    Dense commitments slice the task directly (``idx`` rows are the
+    slice's own indices).  Sparse commitments pass ``row_map`` — the
+    commitment's ``(N, capacity)`` routing indices — and slot ``s`` of
+    expert ``e``'s bucket reads task row ``row_map[e, s]`` (empty slots
+    point one past the batch, at the zero sentinel row the host appends).
     Shared by ``BMoESystem._make_batched_recompute`` and the
     ``benchmarks/audit_kernels.py`` perf gate, so the benchmark measures
     exactly the production packing.
@@ -66,7 +87,9 @@ def pack_audit_batch(expert_ids: Sequence[int], slices: Sequence[slice],
     idx = np.zeros((sp, cmax), np.int32)
     gid = np.zeros(sp, np.int32)
     for s, (e, sl) in enumerate(zip(expert_ids, slices)):
-        idx[s, :sl.stop - sl.start] = np.arange(sl.start, sl.stop)
+        rows = (np.arange(sl.start, sl.stop) if row_map is None
+                else row_map[int(e), sl.start:sl.stop])
+        idx[s, :sl.stop - sl.start] = rows
         gid[s] = int(e)
     return idx, gid, n
 
@@ -74,14 +97,19 @@ def pack_audit_batch(expert_ids: Sequence[int], slices: Sequence[slice],
 def pack_audit_batch_multi(slots: Sequence[int], expert_ids: Sequence[int],
                            slices: Sequence[slice],
                            row_offsets: Sequence[int], num_experts: int,
-                           bucket: int = 4):
+                           bucket: int = 4,
+                           row_maps: Optional[Sequence[
+                               Optional[np.ndarray]]] = None):
     """Cross-round variant of ``pack_audit_batch``: the work list spans
     several rounds whose expert banks are stacked to ``(R*N, ...)`` and
     whose tasks are concatenated row-wise.  Sample ``s`` of round slot
     ``k = slots[s]`` reads task rows ``row_offsets[k] + slice`` and
     expert ``k * num_experts + expert_ids[s]`` — so one grouped kernel
-    call recomputes a whole drained audit backlog.  Returns the same
-    ``(idx, gid, n)`` contract as ``pack_audit_batch``.
+    call recomputes a whole drained audit backlog.  ``row_maps[k]``, when
+    set, is round ``k``'s sparse routing (see ``pack_audit_batch``): the
+    slice then indexes bucket slots and the task rows come from the
+    committed routing.  Returns the same ``(idx, gid, n)`` contract as
+    ``pack_audit_batch``.
     """
     n = len(expert_ids)
     sp = -(-n // bucket) * bucket
@@ -90,9 +118,35 @@ def pack_audit_batch_multi(slots: Sequence[int], expert_ids: Sequence[int],
     gid = np.zeros(sp, np.int32)
     for s, (k, e, sl) in enumerate(zip(slots, expert_ids, slices)):
         off = int(row_offsets[k])
-        idx[s, :sl.stop - sl.start] = np.arange(off + sl.start, off + sl.stop)
+        rmap = row_maps[k] if row_maps is not None else None
+        rows = (np.arange(sl.start, sl.stop) if rmap is None
+                else rmap[int(e), sl.start:sl.stop])
+        idx[s, :sl.stop - sl.start] = off + rows
         gid[s] = int(k) * num_experts + int(e)
     return idx, gid, n
+
+
+def attestation_digest(round_id: int, verifier: int,
+                       chunk: np.ndarray) -> str:
+    """Salted proof-of-recompute a verifier attests per sampled leaf.
+
+    Domain-separated per (round, verifier): it can only be produced from
+    the recomputed chunk *bytes*, never derived from the executor's
+    published ``leaf_digest`` — which is exactly what lets a re-audit
+    distinguish a real recompute from a rubber-stamp."""
+    a = np.ascontiguousarray(chunk)
+    salt = f"attest:{round_id}:{verifier}:".encode()
+    return digest_bytes(salt + a.tobytes() + str(a.shape).encode()
+                        + str(a.dtype).encode())
+
+
+@dataclasses.dataclass
+class LazySlashEvent:
+    """A verifier caught rubber-stamping by re-audit."""
+    round_id: int
+    verifier: int
+    leaf_index: int
+    amount: float
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,13 +189,19 @@ class AuditPlan:
 
 @dataclasses.dataclass
 class AuditReport:
-    """One verifier pass over one round commitment."""
+    """One verifier pass over one round commitment.
+
+    ``attestations`` (leaf -> salted recompute digest) are only filled
+    when the pool re-audits (``reaudit_rate > 0``): honest verifiers
+    attest from the recomputed bytes, lazy ones echo the executor's
+    published digests — the only data available without recomputing."""
     round_id: int
     verifier: int
     sampled_leaves: List[int]
     fraud_proofs: List[FraudProof]
     recomputed_leaves: int = 0
     lazy: bool = False
+    attestations: Dict[int, str] = dataclasses.field(default_factory=dict)
 
     @property
     def clean(self) -> bool:
@@ -180,21 +240,57 @@ class VerifierPool:
     """
 
     def __init__(self, num_verifiers: int = 3, audit_rate: float = 0.1,
-                 lazy_prob: float = 0.0, seed: int = 0):
+                 lazy_prob: float = 0.0, seed: int = 0,
+                 stakes: Optional[Sequence[float]] = None,
+                 reaudit_rate: float = 0.0,
+                 verifier_slash_fraction: float = 0.5):
         self.num_verifiers = num_verifiers
         self.audit_rate = float(audit_rate)
         self.lazy_prob = float(lazy_prob)
         self._seed = seed
+        # stake-weighted lottery: None keeps the uniform split (and the
+        # exact sampling streams of the pre-stake pool); re-audits need
+        # a stake to burn, so they default an unstaked pool to 1.0 each
+        if stakes is None and reaudit_rate > 0:
+            stakes = np.ones(num_verifiers)
+        if stakes is not None:
+            stakes = np.asarray(stakes, np.float64).copy()
+            if stakes.shape != (num_verifiers,):
+                raise ValueError(f"{stakes.shape} stakes for "
+                                 f"{num_verifiers} verifiers")
+            if (stakes < 0).any():
+                raise ValueError("verifier stakes must be >= 0")
+        self.stakes = stakes
+        self.reaudit_rate = float(reaudit_rate)
+        self.verifier_slash_fraction = float(verifier_slash_fraction)
+        self.lazy_slashes: List[LazySlashEvent] = []
 
     def _rng(self, round_id: int, verifier: int,
              salt: int = 0) -> np.random.Generator:
         return np.random.default_rng(
             ((self._seed * 1_000_003 + round_id) * 97 + verifier) * 31 + salt)
 
+    def rate_of(self, verifier: int) -> float:
+        """Verifier ``verifier``'s per-leaf sampling probability: its
+        stake share of the pool-wide budget ``audit_rate * V`` (uniform
+        pools: exactly ``audit_rate``).  The sum over verifiers is
+        conserved at the pool-wide rate — unless a share is clipped at
+        1.0, sampling probabilities being probabilities."""
+        if self.stakes is None:
+            return self.audit_rate
+        total = float(self.stakes.sum())
+        if total <= 0.0:
+            return 0.0                    # fully-slashed pool audits nothing
+        # (stake * V) / total first: exactly 1.0 for a uniform pool, so
+        # equal stakes reproduce the unweighted sampling streams bit-
+        # for-bit (pinned in tests/test_verifier_lottery.py)
+        share = float(self.stakes[verifier]) * self.num_verifiers / total
+        return min(1.0, self.audit_rate * share)
+
     def sample_leaves(self, round_id: int, verifier: int,
                       num_leaves: int) -> List[int]:
         rng = self._rng(round_id, verifier)
-        keep = rng.random(num_leaves) < self.audit_rate
+        keep = rng.random(num_leaves) < self.rate_of(verifier)
         return [int(i) for i in np.nonzero(keep)[0]]
 
     def audit_one(self, commitment: RoundCommitment,
@@ -211,11 +307,22 @@ class VerifierPool:
                              sampled_leaves=sampled, fraud_proofs=[],
                              lazy=lazy)
         if lazy:
-            return report                  # rubber-stamp: no recompute
+            # rubber-stamp: no recompute.  When attestations are due the
+            # lazy verifier echoes the executor's published digests —
+            # the only bytes it holds — which can never match the salted
+            # attestation a re-audit recomputes.
+            if self.reaudit_rate > 0:
+                report.attestations = {
+                    leaf: commitment.leaf_digests[leaf] for leaf in sampled}
+            return report
         tree = commitment.tree()
         for leaf in sampled:
             e, _, sl = commitment.leaf_coords(leaf)
-            honest = leaf_digest(np.asarray(recompute_fn(e, sl)))
+            chunk = np.asarray(recompute_fn(e, sl))
+            honest = leaf_digest(chunk)
+            if self.reaudit_rate > 0:
+                report.attestations[leaf] = attestation_digest(
+                    commitment.round_id, verifier, chunk)
             report.recomputed_leaves += 1
             claimed = commitment.leaf_digests[leaf]
             if honest != claimed:
@@ -271,6 +378,7 @@ class VerifierPool:
         plan = self.plan_audits(commitment.round_id, commitment.num_leaves,
                                 verifiers)
         digest_of: Dict[int, str] = {}
+        chunk_of: Optional[Dict[int, np.ndarray]] = None
         if plan.unique_leaves:
             coords = [commitment.leaf_coords(leaf)
                       for leaf in plan.unique_leaves]
@@ -280,14 +388,20 @@ class VerifierPool:
             lengths = [sl.stop - sl.start for sl in slices]
             digests = leaf_digest_batch(stacked, lengths)
             digest_of = dict(zip(plan.unique_leaves, digests))
-        return self._reports_from_digests(commitment, plan, digest_of)
+            if self.reaudit_rate > 0:
+                chunk_of = {leaf: stacked[i, :lengths[i]]
+                            for i, leaf in enumerate(plan.unique_leaves)}
+        return self._reports_from_digests(commitment, plan, digest_of,
+                                          chunk_of)
 
-    @staticmethod
-    def _reports_from_digests(commitment: RoundCommitment, plan: AuditPlan,
-                              digest_of: Dict[int, str]) -> List[AuditReport]:
+    def _reports_from_digests(self, commitment: RoundCommitment,
+                              plan: AuditPlan, digest_of: Dict[int, str],
+                              chunk_of: Optional[Dict[int, np.ndarray]] = None
+                              ) -> List[AuditReport]:
         """Per-verifier reports/fraud proofs from a plan plus the honest
-        digests of its unique leaves (shared by ``audit_batched`` and the
-        cross-round ``audit_rounds``)."""
+        digests (and, when re-audits are on, the recomputed bytes) of its
+        unique leaves (shared by ``audit_batched`` and the cross-round
+        ``audit_rounds``)."""
         tree = None
         reports = []
         for v, leaves in plan.sampled.items():
@@ -296,11 +410,18 @@ class VerifierPool:
                                  lazy=plan.lazy[v])
             reports.append(report)
             if plan.lazy[v]:
+                if self.reaudit_rate > 0:
+                    report.attestations = {
+                        leaf: commitment.leaf_digests[leaf]
+                        for leaf in leaves}
                 continue
             report.recomputed_leaves = sum(
                 1 for leaf in leaves if plan.owner.get(leaf) == v)
             for leaf in leaves:
                 honest = digest_of[leaf]
+                if chunk_of is not None:
+                    report.attestations[leaf] = attestation_digest(
+                        commitment.round_id, v, chunk_of[leaf])
                 claimed = commitment.leaf_digests[leaf]
                 if honest != claimed:
                     if tree is None:
@@ -342,25 +463,86 @@ class VerifierPool:
                 experts.append(e)
                 slices.append(sl)
         digests: List[str] = []
+        stacked = None
+        lengths = [sl.stop - sl.start for sl in slices]
         if slots:
             stacked = np.asarray(multi_recompute_fn(slots, experts, slices))
-            digests = leaf_digest_batch(
-                stacked, [sl.stop - sl.start for sl in slices])
+            digests = leaf_digest_batch(stacked, lengths)
         out: Dict[int, List[AuditReport]] = {}
         cursor = 0
         for com, plan in zip(commitments, plans):
-            digest_of = dict(zip(
-                plan.unique_leaves,
-                digests[cursor:cursor + len(plan.unique_leaves)]))
+            span = range(cursor, cursor + len(plan.unique_leaves))
+            digest_of = dict(zip(plan.unique_leaves,
+                                 [digests[i] for i in span]))
+            chunk_of = ({leaf: stacked[i, :lengths[i]]
+                         for leaf, i in zip(plan.unique_leaves, span)}
+                        if self.reaudit_rate > 0 and stacked is not None
+                        else None)
             cursor += len(plan.unique_leaves)
             out[com.round_id] = self._reports_from_digests(com, plan,
-                                                           digest_of)
+                                                           digest_of,
+                                                           chunk_of)
         return out
+
+    # -------------------------------------------------------- re-audit
+    def reaudit(self, commitment: RoundCommitment,
+                reports: Sequence[AuditReport],
+                recompute_fn: RecomputeFn) -> List[int]:
+        """Second-layer audit of the auditors: spot-check each verifier's
+        attestations at ``reaudit_rate`` per sampled leaf.
+
+        The expected attestation is recomputed from the honest chunk
+        bytes with the (round, verifier) salt; a verifier whose submitted
+        attestation differs — a rubber-stamper echoing published digests,
+        or one that attested garbage — is slashed
+        (``verifier_slash_fraction`` of its stake burned, which also
+        shrinks its share of every future stake-weighted lottery).  One
+        slash per (round, verifier).  Returns the caught verifier ids.
+        """
+        if self.reaudit_rate <= 0 or self.stakes is None:
+            return []
+        caught: List[int] = []
+        cache: Dict[int, np.ndarray] = {}
+        for report in reports:
+            rng = self._rng(commitment.round_id, report.verifier, salt=2)
+            coins = rng.random(len(report.sampled_leaves))
+            for leaf, coin in zip(report.sampled_leaves, coins):
+                if coin >= self.reaudit_rate:
+                    continue
+                if leaf not in cache:
+                    e, _, sl = commitment.leaf_coords(leaf)
+                    cache[leaf] = np.asarray(recompute_fn(e, sl))
+                expected = attestation_digest(commitment.round_id,
+                                              report.verifier, cache[leaf])
+                if report.attestations.get(leaf) != expected:
+                    amount = float(self.stakes[report.verifier]
+                                   * self.verifier_slash_fraction)
+                    self.stakes[report.verifier] -= amount
+                    self.lazy_slashes.append(LazySlashEvent(
+                        round_id=commitment.round_id,
+                        verifier=report.verifier, leaf_index=leaf,
+                        amount=amount))
+                    caught.append(report.verifier)
+                    break                  # one slash per (round, verifier)
+        return caught
 
     def detection_probability(self, corrupted_leaves: int,
                               honest_verifiers: Optional[int] = None) -> float:
         """Analytic bound: P[>=1 corrupted leaf sampled by an honest
-        verifier] = 1 - (1-audit_rate)^(k*v)."""
+        verifier].
+
+        Uniform pool: ``1 - (1-audit_rate)^(k*v)``.  Stake-weighted
+        pool: each verifier's per-leaf rate is its ``rate_of``, so the
+        bound is ``1 - prod_v (1-rate_v)^k`` over the honest verifiers —
+        and with only a *count* of honest verifiers given, the v
+        LOWEST-rate verifiers are assumed honest (the conservative
+        bound: any other honest set detects at least as well)."""
         v = (self.num_verifiers if honest_verifiers is None
              else honest_verifiers)
-        return 1.0 - (1.0 - self.audit_rate) ** (corrupted_leaves * v)
+        if self.stakes is None:
+            return 1.0 - (1.0 - self.audit_rate) ** (corrupted_leaves * v)
+        rates = sorted(self.rate_of(i) for i in range(self.num_verifiers))
+        miss = 1.0
+        for r in rates[:v]:
+            miss *= (1.0 - r) ** corrupted_leaves
+        return 1.0 - miss

@@ -132,22 +132,43 @@ def chunk_bounds(batch: int, chunks: int) -> List[int]:
 class RoundCommitment:
     """What the executor publishes for one round.
 
-    Only ``root`` goes on-chain; the claimed outputs (the leaf data) stay
-    off-chain with the executor, retrievable by auditors on demand.
+    Only ``root`` (plus, for sparse dispatch, the routing digest) goes
+    on-chain; the claimed outputs (the leaf data) stay off-chain with the
+    executor, retrievable by auditors on demand.
+
+    Dense dispatch commits the full per-expert outputs ``(N, B, C)`` —
+    leaf ``(e, c)`` covers batch rows ``bounds[c]:bounds[c+1]``.  Sparse
+    dispatch commits the capacity-bucketed buffers ``(N, capacity, C)``
+    the executor actually computed: leaf ``(e, c)`` covers bucket slots
+    ``bounds[c]:bounds[c+1]`` of expert ``e``, and ``row_index[e, s]``
+    names the task row filling slot ``s`` (one past the batch = empty
+    slot, recomputed from a zero row).  Publishing ``row_index`` is what
+    lets any auditor re-derive the exact buckets and recompute a sampled
+    leaf without re-running the gate — verification cost scales with
+    ``top_k/num_experts`` exactly like execution cost.
     """
     round_id: int
     executor: int
     root: str
     num_experts: int
     chunks_per_expert: int
-    bounds: List[int]                       # batch chunk boundaries
+    bounds: List[int]                       # batch/bucket chunk boundaries
     leaf_digests: List[str]
-    claimed: np.ndarray                     # (N, B, C) executor's outputs
+    claimed: np.ndarray                     # (N, B|cap, C) executor outputs
     task_digest: str = ""
+    row_index: Optional[np.ndarray] = None  # (N, cap) task row per slot
+    routing_digest: str = ""                # binds row_index on-chain
 
     @property
     def num_leaves(self) -> int:
         return len(self.leaf_digests)
+
+    @property
+    def rows_per_expert(self) -> int:
+        """Committed rows per expert: the capacity bucket under sparse
+        dispatch, the full batch under dense — the unit audit/court
+        recompute cost scales with."""
+        return int(self.claimed.shape[1])
 
     def leaf_coords(self, leaf: int) -> Tuple[int, int, slice]:
         """leaf index -> (expert, chunk, batch slice)."""
@@ -162,11 +183,22 @@ class RoundCommitment:
         return MerkleTree(self.leaf_digests)
 
 
+def routing_digest(row_index: np.ndarray) -> str:
+    """Digest of the published routing indices (domain-separated so a
+    routing tensor can never collide with an output leaf)."""
+    a = np.ascontiguousarray(row_index)
+    return digest_bytes(b"routing:" + a.tobytes() + str(a.shape).encode()
+                        + str(a.dtype).encode())
+
+
 def commit_outputs(outputs, *, round_id: int, executor: int,
-                   chunks_per_expert: int = 4,
-                   task_digest: str = "") -> RoundCommitment:
+                   chunks_per_expert: int = 4, task_digest: str = "",
+                   row_index: Optional[np.ndarray] = None) -> RoundCommitment:
     """Build the executor's round commitment from its claimed per-expert
-    outputs ``(N, B, C)``."""
+    outputs ``(N, B, C)`` — or, with ``row_index``, from its sparse
+    capacity-bucketed buffers ``(N, capacity, C)`` (see RoundCommitment:
+    the routing indices travel with the commitment so auditors re-derive
+    the same buckets)."""
     claimed = np.ascontiguousarray(outputs)
     n_experts, batch = claimed.shape[:2]
     bounds = chunk_bounds(batch, chunks_per_expert)
@@ -184,8 +216,15 @@ def commit_outputs(outputs, *, round_id: int, executor: int,
         digests = [per_chunk[c][e]
                    for e in range(n_experts) for c in range(chunks)]
     tree = MerkleTree(digests)
+    if row_index is not None:
+        row_index = np.ascontiguousarray(np.asarray(row_index, np.int32))
+        if row_index.shape != (n_experts, batch):
+            raise ValueError(f"row_index {row_index.shape} does not match "
+                             f"claimed {(n_experts, batch)}")
     return RoundCommitment(round_id=round_id, executor=executor,
                            root=tree.root, num_experts=n_experts,
                            chunks_per_expert=chunks, bounds=bounds,
                            leaf_digests=digests, claimed=claimed,
-                           task_digest=task_digest)
+                           task_digest=task_digest, row_index=row_index,
+                           routing_digest=(routing_digest(row_index)
+                                           if row_index is not None else ""))

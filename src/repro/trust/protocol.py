@@ -63,6 +63,15 @@ class TrustConfig:
     bounty_fraction: float = 0.5       # slashed amount paid to reporter
     min_stake: float = 0.25            # bond needed to execute
     lazy_verifier_prob: float = 0.0    # P[a verifier rubber-stamps]
+    # stake-weighted verifier lottery (None: uniform split, the legacy
+    # streams): verifier v samples each leaf with probability
+    # audit_rate * stake_v / sum(stakes) — pool-wide rate conserved
+    verifier_stakes: Optional[Tuple[float, ...]] = None
+    # second-layer audit of the auditors: spot-check each verifier's
+    # salted recompute attestations at this per-leaf rate; mismatches
+    # (rubber-stampers) burn verifier_slash_fraction of their stake
+    reaudit_rate: float = 0.0
+    verifier_slash_fraction: float = 0.5
     audit_backend: str = "batched"     # batched (one grouped recompute
     #                                    call/round) | eager (reference
     #                                    oracle: one dispatch per leaf)
@@ -156,10 +165,13 @@ class OptimisticProtocol:
         # conviction revokes only its own round.
         self.chained = chained
         # cfg.audit_rate is the pool-wide sampled fraction; each verifier
-        # draws its share so total recompute stays at audit_rate
+        # draws its share (stake-weighted when verifier_stakes is set) so
+        # total recompute stays at audit_rate
         self.verifiers = VerifierPool(
             cfg.num_verifiers, cfg.audit_rate / max(cfg.num_verifiers, 1),
-            cfg.lazy_verifier_prob, cfg.seed)
+            cfg.lazy_verifier_prob, cfg.seed,
+            stakes=cfg.verifier_stakes, reaudit_rate=cfg.reaudit_rate,
+            verifier_slash_fraction=cfg.verifier_slash_fraction)
         # stakes/court may be shared with a sibling protocol instance (the
         # host's inference pipeline shares the training pipeline's bonds,
         # so one edge's deposit backs both workloads)
@@ -192,11 +204,11 @@ class OptimisticProtocol:
 
     # ------------------------------------------------------------ commit
     def commit(self, round_id: int, executor: int, outputs,
-               task_digest: str = "") -> RoundState:
+               task_digest: str = "", row_index=None) -> RoundState:
         commitment = commit_outputs(
             outputs, round_id=round_id, executor=executor,
             chunks_per_expert=self.cfg.chunks_per_expert,
-            task_digest=task_digest)
+            task_digest=task_digest, row_index=row_index)
         state = RoundState(round_id=round_id, executor=executor,
                            commitment=commitment, phase=RoundPhase.ACCEPTED,
                            deadline=round_id + self.cfg.challenge_window)
@@ -306,6 +318,9 @@ class OptimisticProtocol:
                 if verify_fraud_proof(state.commitment.root, proof,
                                       recompute_fn, sl):
                     confirmed.append(proof)
+        # second-layer lottery: spot-check the verifiers' own recompute
+        # attestations and slash rubber-stampers out of future lotteries
+        self.verifiers.reaudit(state.commitment, reports, recompute_fn)
         if confirmed:
             state.phase = RoundPhase.CHALLENGED
             state.proofs.extend(confirmed)

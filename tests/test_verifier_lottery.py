@@ -1,0 +1,241 @@
+"""Stake-weighted verifier lottery + lazy-verifier slashing.
+
+The pool-wide audit budget is fixed; stakes decide how it is split:
+verifier v samples each leaf w.p. ``audit_rate * stake_v / sum(stakes)``
+(x pool size under the per-verifier rate convention).  Properties:
+
+- conservation: the summed per-verifier rates equal the pool-wide rate
+  (absent clipping at 1.0), whatever the stake vector;
+- proportionality: rates — and empirical sampling frequencies — follow
+  stakes;
+- exactness: a uniform stake vector reproduces the unweighted pool's
+  sampling streams bit-for-bit (determinism pins stay valid);
+- accountability: a rubber-stamping verifier (echoing the executor's
+  published digests instead of attesting its salted recompute) is caught
+  by re-audit even on HONEST rounds, slashed, and its future lottery
+  share shrinks while the honest verifiers' shares grow.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.attacks import AttackConfig
+from repro.core.bmoe import BMoEConfig, BMoESystem
+from repro.trust.audit import VerifierPool, attestation_digest
+from repro.trust.commitments import commit_outputs
+from repro.trust.protocol import OptimisticProtocol, RoundPhase, TrustConfig
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _commitment(seed=0, shape=(3, 16, 4), round_id=1):
+    rng = np.random.default_rng(seed)
+    honest = rng.normal(size=shape).astype(np.float32)
+    return honest, commit_outputs(honest, round_id=round_id, executor=0,
+                                  chunks_per_expert=4)
+
+
+# ------------------------------------------------------------- rates
+def test_uniform_stakes_reproduce_unweighted_streams():
+    p0 = VerifierPool(3, 0.3, seed=5)
+    p1 = VerifierPool(3, 0.3, seed=5, stakes=[2.0, 2.0, 2.0])
+    for r in range(20):
+        for v in range(3):
+            assert p0.sample_leaves(r, v, 17) == p1.sample_leaves(r, v, 17)
+            assert p1.rate_of(v) == p0.audit_rate
+
+
+@settings(**SETTINGS)
+@given(stakes=st.lists(st.floats(0.1, 10.0), min_size=2, max_size=6),
+       rate=st.floats(0.01, 0.15))
+def test_rates_follow_stakes_and_conserve_pool_budget(stakes, rate):
+    pool = VerifierPool(len(stakes), rate, seed=0, stakes=stakes)
+    rates = [pool.rate_of(v) for v in range(len(stakes))]
+    # conservation: the pool-wide sampled fraction is unchanged by the
+    # weighting (rate small enough that no share clips at 1.0)
+    if max(rates) < 1.0:
+        assert sum(rates) == pytest.approx(rate * len(stakes), rel=1e-9)
+    # proportionality
+    for v in range(len(stakes)):
+        assert rates[v] == pytest.approx(
+            min(1.0, rate * len(stakes) * stakes[v] / sum(stakes)),
+            rel=1e-9)
+
+
+def test_empirical_sampling_frequency_follows_stakes():
+    stakes = [4.0, 1.0, 1.0]
+    pool = VerifierPool(3, 0.1, seed=2, stakes=stakes)
+    counts = np.zeros(3)
+    rounds, leaves = 400, 50
+    for r in range(rounds):
+        for v in range(3):
+            counts[v] += len(pool.sample_leaves(r, v, leaves))
+    freq = counts / (rounds * leaves)
+    for v in range(3):
+        assert freq[v] == pytest.approx(pool.rate_of(v), abs=0.01)
+    assert counts[0] > 2.5 * counts[1]
+
+
+def test_detection_probability_stake_aware_and_conservative():
+    pool = VerifierPool(2, 0.1, stakes=[1.0, 3.0])
+    k = 4
+    r0, r1 = pool.rate_of(0), pool.rate_of(1)       # 0.05, 0.15
+    assert (r0, r1) == (pytest.approx(0.05), pytest.approx(0.15))
+    # whole pool honest: product over both true rates
+    assert pool.detection_probability(k) == pytest.approx(
+        1 - (1 - r0) ** k * (1 - r1) ** k)
+    # one honest verifier of unknown identity: assume the LOWEST rate
+    # (the uniform formula would overstate detection 2x here)
+    assert pool.detection_probability(k, honest_verifiers=1) == \
+        pytest.approx(1 - (1 - r0) ** k)
+
+
+def test_fully_slashed_pool_samples_nothing():
+    pool = VerifierPool(2, 0.5, seed=0, stakes=[0.0, 0.0])
+    assert pool.rate_of(0) == 0.0
+    assert pool.sample_leaves(0, 0, 100) == []
+
+
+def test_bad_stake_vectors_rejected():
+    with pytest.raises(ValueError):
+        VerifierPool(3, 0.1, stakes=[1.0, 1.0])
+    with pytest.raises(ValueError):
+        VerifierPool(2, 0.1, stakes=[1.0, -1.0])
+
+
+# ---------------------------------------------------------- re-audit
+def test_attestation_underivable_from_published_digest():
+    honest, com = _commitment()
+    chunk = com.leaf_chunk(0)
+    assert attestation_digest(1, 0, chunk) != com.leaf_digests[0]
+    assert attestation_digest(1, 0, chunk) != attestation_digest(1, 1, chunk)
+    assert attestation_digest(2, 0, chunk) != attestation_digest(1, 0, chunk)
+
+
+def test_lazy_verifier_caught_on_honest_round_and_loses_lottery_share():
+    """The point of salted attestations: on an honest round the lazy
+    verifier's echoed digests are 'correct' leaf digests — but not the
+    salted recompute digest only a real recompute can produce, so the
+    re-audit still catches it."""
+    honest, com = _commitment()
+    recompute = lambda e, sl: honest[e, sl]                     # noqa: E731
+    pool = VerifierPool(2, 0.4, seed=3, stakes=[1.0, 1.0], reaudit_rate=1.0)
+    reports = pool.audit(com, recompute)
+    assert all(r.sampled_leaves and r.attestations for r in reports)
+    # verifier 1 rubber-stamps: echoes the executor's published digests
+    reports[1].attestations = {leaf: com.leaf_digests[leaf]
+                               for leaf in reports[1].sampled_leaves}
+    rate_before = pool.rate_of(1)
+    caught = pool.reaudit(com, reports, recompute)
+    assert caught == [1]
+    [ev] = pool.lazy_slashes
+    assert (ev.round_id, ev.verifier, ev.amount) == (1, 1, 0.5)
+    assert pool.stakes[1] == 0.5 and pool.stakes[0] == 1.0
+    # its lottery share shrank, the honest verifier's grew, budget kept
+    assert pool.rate_of(1) < rate_before < pool.rate_of(0)
+    assert pool.rate_of(0) + pool.rate_of(1) == pytest.approx(0.8)
+    # an honest verifier is never slashed, however often re-audited
+    for _ in range(3):
+        assert pool.reaudit(com, [reports[0]], recompute) == []
+    assert pool.stakes[0] == 1.0
+
+
+def test_batched_attestations_match_eager():
+    honest, com = _commitment()
+    pool_e = VerifierPool(3, 0.6, seed=1, stakes=[1, 2, 3], reaudit_rate=1.0)
+    pool_b = VerifierPool(3, 0.6, seed=1, stakes=[1, 2, 3], reaudit_rate=1.0)
+
+    def batch_fn(experts, slices):
+        cmax = max(sl.stop - sl.start for sl in slices)
+        out = np.zeros((len(experts), cmax) + honest.shape[2:],
+                       honest.dtype)
+        for s, (e, sl) in enumerate(zip(experts, slices)):
+            out[s, :sl.stop - sl.start] = honest[e, sl]
+        return out
+
+    eager = pool_e.audit(com, lambda e, sl: honest[e, sl])
+    batched = pool_b.audit_batched(com, batch_fn)
+    for a, b in zip(batched, eager):
+        assert a.attestations == b.attestations
+
+
+# ------------------------------------------------- protocol integration
+def test_protocol_reaudit_slashes_lazy_verifiers_only():
+    cfg = TrustConfig(audit_rate=1.0, num_verifiers=4, challenge_window=1,
+                      lazy_verifier_prob=0.5, reaudit_rate=1.0, seed=7)
+    proto = OptimisticProtocol(cfg, num_edges=3)
+    honest = np.zeros((2, 8, 3), np.float32)
+    lazy_seen = set()
+    for rid in range(6):
+        proto.commit(rid, executor=rid % 3, outputs=honest)
+        proto.run_audits(rid, lambda e, sl: honest[e, sl])
+        for rep in proto.rounds[rid].reports:
+            if rep.lazy and rep.sampled_leaves:  # empty lottery: nothing
+                lazy_seen.add((rid, rep.verifier))   # to attest or catch
+        proto.advance(rid)
+    assert lazy_seen, "seed produced no lazy draws — adjust seed"
+    # every lazy (round, verifier) pass was caught; nobody else was
+    assert {(ev.round_id, ev.verifier)
+            for ev in proto.verifiers.lazy_slashes} == lazy_seen
+    assert (proto.verifiers.stakes <= 1.0).all()
+    assert (proto.verifiers.stakes >= 0.0).all()
+    # honest rounds still finalize: catching auditors never blocks rounds
+    assert all(st.phase is RoundPhase.FINALIZED
+               for rid, st in proto.rounds.items() if rid < 5)
+
+
+def test_serving_session_reaudit_slashes_lazy_auditor():
+    """ServingEngine session audits run the same second-layer lottery: a
+    rubber-stamping session auditor (lazy_prob=1: it samples but echoes
+    published digests instead of recomputing) is caught by re-audit and
+    slashed, even though the served stream itself is honest."""
+    from repro.configs import get_config
+    from repro.data.synthetic import serving_requests
+    from repro.serve.engine import ServingEngine
+    from repro.train.loop import init_model
+    trust = TrustConfig(audit_rate=1.0, num_verifiers=1, challenge_window=4,
+                        lazy_verifier_prob=1.0, reaudit_rate=1.0,
+                        verifier_stakes=(1.0,))
+    cfg = get_config("smollm-360m", smoke=True)
+    eng = ServingEngine(cfg, init_model(cfg, seed=0), batch_slots=2,
+                        cache_len=64, trust=trust)
+    eng.submit(list(serving_requests(cfg.vocab_size, 2, max_prompt=6,
+                                     max_new=4, seed=0)))
+    eng.run()
+    # the lazy auditor rubber-stamped an honest stream: sessions pass...
+    assert not any(rec.revoked for rec in eng.records.values())
+    # ...but the re-audit caught the auditor and burned its stake
+    assert eng._auditors.lazy_slashes
+    assert eng._auditors.stakes[0] < 1.0
+
+
+def test_system_end_to_end_lazy_verifier_slashed_and_frauds_still_caught():
+    """BMoESystem integration: with a weighted pool, re-audits on, and a
+    lazy-ish pool, training still catches the cheating executor AND the
+    rubber-stampers lose stake."""
+    from repro.data.synthetic import FMNIST, make_image_dataset
+    xtr, ytr, _, _ = make_image_dataset(FMNIST, n_train=600, n_test=100,
+                                        seed=0)
+    xtr = xtr.reshape(len(xtr), -1)
+    cfg = BMoEConfig(
+        framework="optimistic", pow_difficulty=2,
+        attack=AttackConfig(malicious_edges=(1,), attack_prob=1.0,
+                            noise_std=5.0),
+        trust=TrustConfig(audit_rate=1.0, num_verifiers=3,
+                          challenge_window=1, lazy_verifier_prob=0.4,
+                          verifier_stakes=(1.0, 1.0, 2.0),
+                          reaudit_rate=1.0, seed=3))
+    s = BMoESystem(cfg)
+    rng = np.random.default_rng(0)
+    for idx in [rng.integers(0, len(xtr), 48) for _ in range(6)]:
+        s.train_round(xtr[idx], ytr[idx])
+    s.flush_trust()
+    # executor fraud: caught and slashed despite lazy verifiers
+    assert {ev.edge for ev in s.protocol.stakes.events} == {1}
+    # verifier fraud: every lazy pass was caught by re-audit
+    lazy_passes = {(st.round_id, r.verifier)
+                   for st in s.protocol.rounds.values()
+                   for r in st.reports if r.lazy and r.sampled_leaves}
+    caught = {(ev.round_id, ev.verifier)
+              for ev in s.protocol.verifiers.lazy_slashes}
+    assert lazy_passes and caught == lazy_passes
