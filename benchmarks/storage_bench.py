@@ -1,0 +1,180 @@
+"""Storage-layer economy: the CI gate for the chunked expert store.
+
+Three claims, each gated:
+
+1. **Chunk-dedup uploads** — a one-round training delta re-uploads only
+   the experts the round routed to.  Trained on a single-sample task
+   (exactly ``top_k`` of ``num_experts`` experts activated), the delta
+   upload must be <= ``top_k/num_experts`` of the full-bank upload
+   (small margin for manifest framing).
+2. **Warm edge cache** — the first bank resolution after a version bump
+   fetches the changed bytes (cold); repeated inference against the
+   frozen bank must fetch (almost) nothing — the gate-driven cache
+   serves from residency.
+3. **DA determinism** — a withheld-replica scenario (challenge ->
+   window -> slash) must produce identical challenge records, faults,
+   stake vectors and ``da_slash`` blocks across two fresh runs with the
+   same seed.
+
+Writes ``BENCH_storage.json`` and exits non-zero if any gate fails.
+Transfer costs are also reported in *modeled* seconds on the
+deterministic ``NetworkCostModel`` so the trajectory is
+machine-independent.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core.bmoe import BMoEConfig, BMoESystem
+from repro.trust.protocol import TrustConfig
+
+NUM_EXPERTS = 8
+TOP_K = 2
+
+
+def _data(n=512, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n, 784)).astype(np.float32),
+            rng.integers(0, 10, n))
+
+
+def _system(framework="traditional", seed=0, num_experts=NUM_EXPERTS,
+            **overrides) -> BMoESystem:
+    cfg = BMoEConfig(num_experts=num_experts, num_edges=num_experts,
+                     top_k=TOP_K, framework=framework, pow_difficulty=2,
+                     seed=seed, **overrides)
+    return BMoESystem(cfg)
+
+
+def bench_dedup() -> dict:
+    s = _system()
+    x, y = _data()
+    full_upload = s.expert_store.stats["uploaded_bytes"]   # genesis bank
+    before = full_upload
+    s.train_round(x[:1], y[:1])        # one sample: exactly TOP_K routed
+    delta = s.expert_store.stats["uploaded_bytes"] - before
+    return {
+        "full_bank_upload_bytes": full_upload,
+        "one_round_delta_bytes": delta,
+        "delta_fraction": delta / full_upload,
+        "target_fraction": TOP_K / NUM_EXPERTS,
+        "chunks_deduped": s.expert_store.stats["chunks_deduped"],
+        "modeled_put_s": s.storage.stats["modeled_put_s"],
+    }
+
+
+def bench_warm_cache(repeats: int = 3) -> dict:
+    s = _system(seed=1)
+    x, y = _data(seed=1)
+    for _ in range(2):                  # a couple of version bumps
+        s.train_round(x[:128], y[:128])
+    base = s.edge_cache.stats["fetched_bytes"]
+    s.infer(x[:128])                    # cold: resolve the current bank
+    cold = s.edge_cache.stats["fetched_bytes"] - base
+    base = s.edge_cache.stats["fetched_bytes"]
+    h0 = s.edge_cache.stats["hits"]
+    for _ in range(repeats):
+        s.infer(x[:128])                # warm: frozen bank, all hits
+    warm = s.edge_cache.stats["fetched_bytes"] - base
+    return {
+        "cold_fetch_bytes": cold,
+        "warm_fetch_bytes_total": warm,
+        "warm_repeats": repeats,
+        "warm_hits": s.edge_cache.stats["hits"] - h0,
+        "modeled_get_s": s.storage.stats["modeled_get_s"],
+    }
+
+
+def _da_run(seed: int):
+    s = _system(framework="optimistic", seed=seed, num_experts=6,
+                da_rate=1.0,
+                trust=TrustConfig(audit_rate=0.1, challenge_window=2))
+    x, y = _data(seed=2)
+    man = s.expert_store.manifest("expert/0", 0)
+    bad_cid = man.chunk_cids[0]
+    bad_node = s.storage.replicas(bad_cid)[0]
+    s.storage.withhold(bad_cid, bad_node)
+    rng = np.random.default_rng(3)
+    for _ in range(4):
+        idx = rng.integers(0, len(x), 48)
+        s.train_round(x[idx], y[idx])
+    s.flush_trust()
+    challenges = [(c.challenge_id, c.round_id, c.object_id, c.chunk_index,
+                   c.node_id, c.status, c.kind) for c in s.da.challenges]
+    faults = [(f.round_id, f.executor, f.cid, f.kind) for f in s.da.faults]
+    blocks = [dict(b.payload) for b in s.ledger.find_all(kind="da_slash")]
+    return challenges, faults, list(s.da.stakes.stake), blocks, bad_node
+
+
+def bench_da_determinism() -> dict:
+    a = _da_run(seed=0)
+    b = _da_run(seed=0)
+    identical = a == b
+    challenges, faults, stakes, blocks, bad_node = a
+    return {
+        "identical_across_runs": identical,
+        "challenges": len(challenges),
+        "slashes": len(faults),
+        "slashed_node": bad_node,
+        "slashed_node_stake": stakes[bad_node],
+        "da_slash_blocks": len(blocks),
+    }
+
+
+def main(json_path: str = "BENCH_storage.json", gate: bool = True):
+    dedup = bench_dedup()
+    warm = bench_warm_cache()
+    da = bench_da_determinism()
+    result = {
+        "config": {"num_experts": NUM_EXPERTS, "top_k": TOP_K},
+        "dedup": dedup, "warm_cache": warm, "da": da,
+    }
+    with open(json_path, "w") as f:
+        json.dump(result, f, indent=2)
+
+    margin = 1.15                       # manifest framing / bias chunks
+    target = dedup["target_fraction"] * margin
+    warm_ok = (warm["warm_fetch_bytes_total"]
+               <= 0.05 * max(warm["cold_fetch_bytes"], 1))
+    rows = [
+        row("storage_dedup", 0.0,
+            f"delta_frac={dedup['delta_fraction']:.3f}"
+            f"(target<={target:.3f});"
+            f"delta_bytes={dedup['one_round_delta_bytes']}"),
+        row("storage_warm_cache", 0.0,
+            f"cold={warm['cold_fetch_bytes']};"
+            f"warm={warm['warm_fetch_bytes_total']};"
+            f"hits={warm['warm_hits']}"),
+        row("storage_da", 0.0,
+            f"identical={da['identical_across_runs']};"
+            f"slashes={da['slashes']};"
+            f"blocks={da['da_slash_blocks']}"),
+    ]
+    if gate:
+        if dedup["delta_fraction"] > target:
+            raise SystemExit(
+                f"perf gate: one-round dedup upload fraction "
+                f"{dedup['delta_fraction']:.3f} exceeds top_k/num_experts "
+                f"target {target:.3f}")
+        if not warm_ok:
+            raise SystemExit(
+                f"perf gate: warm-cache fetch bytes "
+                f"{warm['warm_fetch_bytes_total']} not << cold "
+                f"{warm['cold_fetch_bytes']}")
+        if not (da["identical_across_runs"] and da["slashes"] > 0
+                and da["da_slash_blocks"] > 0):
+            raise SystemExit(f"perf gate: DA scenario not deterministic or "
+                             f"no slash recorded ({da})")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_storage.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(args.json)

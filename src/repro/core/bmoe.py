@@ -42,14 +42,16 @@ import numpy as np
 from repro.core import experts as ex
 from repro.core.attacks import AttackConfig, round_attack_mask, poison_tree
 from repro.core.consensus import ProofOfWork
-from repro.core.ledger import Ledger, digest_array, digest_tree
+from repro.core.ledger import Ledger, digest_array, digest_bytes, digest_tree
 from repro.core.reputation import ReputationConfig, ReputationLedger, WorkloadBalancer
-from repro.core.storage import StorageNetwork, serialize_tree
+from repro.storage import (ExpertCache, ExpertStore, GateEMA,
+                           NetworkCostModel, StorageNetwork)
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.models.moe import capacity_positions
 from repro.trust.audit import pack_audit_batch, pack_audit_batch_multi
 from repro.trust.commitments import chunk_bounds
+from repro.trust.da import DataAvailabilityAuditor
 from repro.trust.protocol import (TERMINAL_PHASES, AuditJob,
                                   OptimisticProtocol, RoundPhase,
                                   TrustConfig)
@@ -80,8 +82,25 @@ class BMoEConfig:
     attack: AttackConfig = dataclasses.field(default_factory=AttackConfig)
     pow_difficulty: int = 8
     num_chain_nodes: int = 8
-    store_every: int = 50           # expert->storage cadence (rounds)
     bandwidth_bytes_per_s: float = 125e6   # 1 Gbps edge links
+    # chunked storage / edge cache (repro.storage): every round uploads
+    # the *changed* experts as a new chunk-manifest version (chunk-level
+    # dedup against the previous version) and the edge resolves the
+    # round's bank through a bounded LRU ExpertCache instead of keeping
+    # the whole bank resident.  "off" keeps the bank in memory — the
+    # pre-cache oracle (bit-identical outputs, pinned in
+    # tests/test_expert_cache.py).
+    edge_cache: str = "on"          # on | off
+    edge_cache_bytes: Optional[int] = None  # cache byte budget (None: unbounded)
+    chunk_bytes: int = 1 << 16      # storage chunk size
+    prefetch_topk: int = 0          # EMA-prefetch this many hot experts
+    num_storage_nodes: int = 4
+    storage_replication: int = 2
+    # data-availability challenges (repro.trust.da): per-chunk sampling
+    # rate at which replica nodes are challenged to produce committed
+    # chunks each optimistic round; a withheld chunk past the challenge
+    # window slashes the storage node (da_slash ledger block)
+    da_rate: float = 0.05
     seed: int = 0
     # paper §VI extensions (see repro.core.reputation)
     reputation: Optional[ReputationConfig] = None       # §VI-B/D
@@ -106,8 +125,27 @@ class BMoESystem:
             in_ch=cfg.in_ch, out=cfg.num_classes)
         self._apply_grouped = ex.grouped_apply_fn(cfg.expert_kind)
         self.ledger = Ledger()
-        self.storage = StorageNetwork(num_nodes=4, replication=2,
-                                      seed=cfg.seed)
+        self.storage = StorageNetwork(
+            num_nodes=cfg.num_storage_nodes,
+            replication=cfg.storage_replication, seed=cfg.seed,
+            cost=NetworkCostModel(
+                bandwidth_bytes_per_s=cfg.bandwidth_bytes_per_s))
+        # the storage layer proper: versioned per-expert chunk manifests
+        # (version v = the bank state entering round v; only changed
+        # experts re-upload, and unchanged chunks dedup away), plus the
+        # edge-side cache the executor resolves activated experts through
+        self.expert_store = ExpertStore(self.storage,
+                                        chunk_bytes=cfg.chunk_bytes)
+        self.edge_cache = (ExpertCache(self.expert_store,
+                                       cfg.edge_cache_bytes)
+                           if cfg.edge_cache == "on" else None)
+        self.gate_ema = GateEMA(cfg.num_experts)
+        self._expert_like = jax.tree_util.tree_map(
+            lambda a: np.asarray(a[0]), self.experts)
+        self._bank_version = -1
+        self._resolved_bank = None      # device bank memo, keyed by the
+        self._resolved_key = None       # resolved manifest cids
+        self._publish_bank(None, 0)     # genesis bank: every expert, v0
         self.pow = ProofOfWork(cfg.num_chain_nodes,
                                difficulty_bits=cfg.pow_difficulty,
                                seed=cfg.seed)
@@ -123,9 +161,10 @@ class BMoESystem:
                          if cfg.workload_balance else None)
         self.activation_counts = np.zeros(cfg.num_experts)
         self.activation_total = 0
-        self._expert_cids: List[str] = []
-        # audit evidence CIDs per optimistic round, pruned from storage
-        # once the round's challenge window closes (data-availability)
+        # manifest CIDs of the expert versions each open optimistic round
+        # committed against — retained in the store while the round's
+        # challenge window is open (the data-availability contract) and
+        # released once it closes (superseded versions are then GC'd)
         self._audit_cids: Dict[int, List[str]] = {}
         # pipelined-scheduling state: per-pending-round snapshots (the
         # (gate, experts) the executor was handed, the task, and the keys
@@ -147,9 +186,13 @@ class BMoESystem:
         # critical path, inside "consensus".
         # "audit_infer" keeps the inference pipeline's drains out of the
         # per-training-round latency decomposition
+        # "storage": expert-version publication + edge-cache bank
+        # resolution seconds (host wall-clock; the *modeled* transfer
+        # time lives in storage_report(), on the network cost model)
         self._timers: Dict[str, float] = {"compute": 0.0, "consensus": 0.0,
                                           "chain": 0.0, "audit": 0.0,
-                                          "audit_infer": 0.0}
+                                          "audit_infer": 0.0,
+                                          "storage": 0.0}
         # verification-compute ledger, in units of (expert evaluations x
         # samples): base = the one canonical execution, verify = recompute
         # done purely to check it (redundant copies / audits), escalate =
@@ -159,10 +202,19 @@ class BMoESystem:
                              "escalate_evals": 0.0, "rounds": 0}
         self.trust_cfg: Optional[TrustConfig] = None
         self.protocol: Optional[OptimisticProtocol] = None
+        self.da: Optional[DataAvailabilityAuditor] = None
         if cfg.framework == "optimistic":
             self.trust_cfg = cfg.trust or TrustConfig(seed=cfg.seed)
             self.protocol = OptimisticProtocol(self.trust_cfg, cfg.num_edges,
                                                self.reputation)
+            if cfg.da_rate > 0:
+                # storage nodes post their own bonds: a replica that
+                # cannot produce a committed chunk inside the challenge
+                # window is slashed (see repro.trust.da)
+                self.da = DataAvailabilityAuditor(
+                    self.storage, num_nodes=cfg.num_storage_nodes,
+                    window=self.trust_cfg.challenge_window,
+                    sample_rate=cfg.da_rate, seed=cfg.seed)
             self._apply_one = (ex.mlp_expert_apply if cfg.expert_kind == "mlp"
                                else ex.cnn_expert_apply)
             # one grouped jitted call recomputes every sampled (expert,
@@ -200,17 +252,26 @@ class BMoESystem:
         mask_e = round_attack_mask(atk, cfg.num_edges, rkey)
         executor = (self.protocol.pick_executor(self.round)
                     if cfg.framework == "optimistic" else 0)
-        prev = (self.gate, self.experts)
-
         gate_bias, active = self._controls()
+        # Step 2 (storage -> edge): the executor edge resolves this
+        # round's bank through its cache — activated experts pinned and
+        # refreshed at the committed version, misses fetched chunk-by-
+        # chunk from the storage layer (bit-identical to the resident
+        # bank: pinned in tests/test_expert_cache.py)
+        t0 = time.perf_counter()
+        bank = self._resolve_bank(x, gate_bias)
+        self._timers["storage"] += time.perf_counter() - t0
+        prev = (self.gate, bank)
+
         t0 = time.perf_counter()
         (self.gate, self.experts, metrics) = self._train_step(
-            self.gate, self.experts, x, y, mask_e,
+            self.gate, bank, x, y, mask_e,
             jax.random.fold_in(rkey, 1), atk.noise_std,
             jnp.asarray(atk.colluding), gate_bias, active,
             jnp.int32(executor))
         metrics = jax.tree_util.tree_map(np.asarray, metrics)
         self._timers["compute"] += time.perf_counter() - t0
+        self.gate_ema.update(metrics["activation"])
 
         batch = int(x.shape[0])
         payload = {
@@ -228,12 +289,23 @@ class BMoESystem:
             self.verify_stats["base_evals"] += cfg.top_k * batch  # routed
         else:
             self.verify_stats["base_evals"] += self._exec_evals(batch)
+        if cfg.framework != "optimistic":
+            # Step 5, chunked: publish the updated experts as new
+            # manifest versions (only routed experts changed; unchanged
+            # chunks dedup away).  The optimistic path publishes after
+            # its commit/audit bookkeeping instead — round r's audits
+            # must be able to retain the version-r manifests first.
+            t0 = time.perf_counter()
+            self._publish_bank(metrics["activation"], self.round + 1)
+            self._timers["storage"] += time.perf_counter() - t0
+            payload["bank_root"] = self._bank_root()[:16]
         if cfg.framework == "bmoe":
             # the redundancy mechanism IS the verification: M-1 extra
             # copies of the same execution
             self.verify_stats["verify_evals"] += \
                 (cfg.num_edges - 1) * self._exec_evals(batch)
-            # Step 4-5: edges upload updated experts; hash vote + storage.
+            # Step 4-5: edges vote on the updated experts' hashes; the
+            # accepted bank's storage root is already in the payload.
             t0 = time.perf_counter()
             payload["trusted_supports"] = metrics["support"].tolist()
             self._expert_hash_vote(atk, rkey, payload)
@@ -254,6 +326,13 @@ class BMoESystem:
             self._timers["consensus"] += (time.perf_counter() - t0
                                           - (self._timers["audit"] - a0))
             payload["loss"] = float(metrics["loss"])
+            t0 = time.perf_counter()
+            if not payload.get("rolled_back"):
+                # a rolled-back round's honest replay already republished
+                # the voided versions (including this round's successor)
+                self._publish_bank(metrics["activation"], self.round + 1)
+            self._timers["storage"] += time.perf_counter() - t0
+            payload["bank_root"] = self._bank_root()[:16]
             t0 = time.perf_counter()
             self._mine(payload)
             self._timers["chain"] += time.perf_counter() - t0
@@ -298,8 +377,9 @@ class BMoESystem:
             mask_e = (round_attack_mask(atk, cfg.num_edges, rkey)
                       if cfg.framework != "optimistic"
                       else jnp.zeros(cfg.num_edges, jnp.float32))
+            bank = self._resolve_bank(x, gate_bias)
             logits, activation, support = self._infer_step(
-                self.gate, self.experts, x, mask_e,
+                self.gate, bank, x, mask_e,
                 jax.random.fold_in(rkey, 1), atk.noise_std,
                 jnp.asarray(atk.colluding), gate_bias, active, jnp.int32(0))
             return (np.asarray(logits), np.asarray(activation),
@@ -315,29 +395,34 @@ class BMoESystem:
         rkey = jax.random.fold_in(rkey, rid)
         mask_e = round_attack_mask(atk, cfg.num_edges, rkey)
         executor = proto.pick_executor(rid)
+        bank = self._resolve_bank(x, gate_bias)
+        version = self._bank_version
         logits, activation, support = self._infer_step(
-            self.gate, self.experts, x, mask_e, jax.random.fold_in(rkey, 1),
+            self.gate, bank, x, mask_e, jax.random.fold_in(rkey, 1),
             atk.noise_std, jnp.asarray(atk.colluding), gate_bias, active,
             jnp.int32(executor))
+        self.gate_ema.update(np.asarray(activation))
         xin = np.asarray(x if cfg.expert_kind == "cnn"
                          else np.asarray(x).reshape(len(x), -1))
         row_index, bounds = self._commitment_layout(self.gate, x,
                                                     xin.shape[0], gate_bias)
         tc = self.trust_cfg
-        honest = self._eager_outputs(self.experts, xin, bounds, row_index)
+        honest = self._eager_outputs(bank, xin, bounds, row_index)
         attacked = bool(np.asarray(mask_e)[executor] > 0)
         state = self._commit_round(proto, rid, executor, honest, attacked,
                                    atk, 1_000_000 + rid,
                                    digest_array(xin[:8]), row_index)
+        # data-availability contract: the versions this inference round
+        # committed against stay retained until its window closes
+        manifests = self._retain_round_manifests(version)
+        self._infer_audit_cids[rid] = manifests
         self._infer_ctx[rid] = {
-            "prev": (self.gate, self.experts), "xin": xin, "honest": honest,
+            "prev": (self.gate, bank), "xin": xin, "honest": honest,
             "executor": executor, "mask_e": np.asarray(mask_e), "atk": atk,
-            "active": active,
+            "active": active, "manifests": manifests,
         }
-        cids = self._infer_audit_cids.setdefault(rid, [])
-        recompute_fn = self._make_recompute(self.experts, xin, cids,
-                                            row_index)
-        batch_fn = (self._make_batched_recompute(self.experts, xin, cids,
+        recompute_fn = self._make_recompute(xin, manifests, row_index)
+        batch_fn = (self._make_batched_recompute(bank, xin, manifests,
                                                  row_index)
                     if tc.audit_backend == "batched" else None)
         proto.schedule_audit(rid, recompute_fn, batch_fn)
@@ -417,11 +502,9 @@ class BMoESystem:
         if winner != honest_digest and payload["expert_hash_accepted"]:
             # majority is malicious: chain is misled (paper §IV-B, >50%)
             payload["chain_misled"] = True
-        if self.round % cfg.store_every == 0:
-            from repro.core.storage import serialize_tree
-            cid = self.storage.put(serialize_tree(self.experts))
-            self._expert_cids.append(cid)
-            payload["expert_cid"] = cid[:16]
+        # Step 5 storage happens per round through the versioned chunk
+        # store (``_publish_bank``); the block's ``bank_root`` already
+        # binds the accepted bank's per-expert manifest roots on-chain.
 
     def _mine(self, payload):
         block = self.pow.mine(len(self.ledger.blocks), self.ledger.head.hash,
@@ -436,6 +519,155 @@ class BMoESystem:
         rows = (sparse_capacity(cfg, batch) if cfg.dispatch == "sparse"
                 else batch)
         return cfg.num_experts * rows
+
+    # ----------------------------------------------------- storage layer
+    @staticmethod
+    def _object_id(e: int) -> str:
+        return f"expert/{e}"
+
+    def _activated_experts(self, x, gate_bias) -> List[int]:
+        """The experts the gate routes this batch to — what the edge must
+        hold current versions of before computing.  The rest of the bank
+        is provably unchanged on-storage: an unrouted expert's combine
+        weight is zero everywhere, so it receives zero gradient and its
+        previous version still serves (pinned in
+        tests/test_expert_cache.py)."""
+        eid, _, _ = self._routing_call(self.gate, x, gate_bias)
+        return [int(e) for e in np.unique(np.asarray(eid))]
+
+    def _resolve_bank(self, x, gate_bias):
+        """Edge-side bank resolution (paper: the edge layer "employs the
+        activated experts downloaded from the storage layer"): activated
+        experts are pinned and resolved at the current version through
+        the bounded ``ExpertCache`` — a miss or a stale entry fetches the
+        expert chunk-by-chunk (CID-verified) from the storage network.
+        The assembled device bank is memoized on the resolved manifest
+        CIDs, so repeated inference against an unchanged bank costs no
+        transfer and no re-stack.  ``edge_cache="off"`` keeps the bank
+        resident — the pre-cache oracle, bit-identical by construction
+        (the chunk round-trip preserves every byte)."""
+        if self.edge_cache is None:
+            return self.experts
+        cfg, cache = self.cfg, self.edge_cache
+        version = self._bank_version
+        ids = [self._object_id(e)
+               for e in self._activated_experts(x, gate_bias)]
+        cache.pin(ids)
+        try:
+            if cfg.prefetch_topk:
+                hot = [self._object_id(e)
+                       for e in self.gate_ema.ranking()[:cfg.prefetch_topk]]
+                cache.prefetch(hot, version, lambda oid: self._expert_like)
+            rows = [cache.get(self._object_id(e), version,
+                              self._expert_like)
+                    for e in range(cfg.num_experts)]
+        finally:
+            cache.unpin(ids)
+        key = tuple(
+            self.expert_store.manifest_cid(self._object_id(e), version)
+            for e in range(cfg.num_experts))
+        if key != self._resolved_key:
+            # host-side stack first, ONE device put per leaf
+            self._resolved_bank = jax.tree_util.tree_map(
+                lambda *ls: jnp.asarray(np.stack(ls)), *rows)
+            self._resolved_key = key
+        return self._resolved_bank
+
+    def _publish_bank(self, activation, version: int) -> None:
+        """Step 5, chunked: upload a new manifest version for every
+        expert the round routed to (``activation=None``: the whole bank —
+        genesis).  Unchanged chunks of a changed expert dedup away inside
+        ``put_version``; untouched experts keep serving from their
+        previous version."""
+        cfg = self.cfg
+        changed = (list(range(cfg.num_experts)) if activation is None else
+                   [int(e) for e in
+                    np.nonzero(np.asarray(activation) > 0)[0]])
+        if not changed:
+            self._bank_version = max(self._bank_version, version)
+            return
+        if len(changed) > 2:
+            # one device->host transfer for the whole bank, slice in host
+            # memory (beats a per-expert gather dispatch per leaf)
+            host = jax.tree_util.tree_map(np.asarray, self.experts)
+            pick = lambda a, e: a[e]
+        else:
+            host = self.experts
+            pick = lambda a, e: np.asarray(a[e])
+        for e in changed:
+            tree_e = jax.tree_util.tree_map(lambda a: pick(a, e), host)
+            self.expert_store.put_version(self._object_id(e), tree_e,
+                                          version)
+        self._bank_version = max(self._bank_version, version)
+
+    def _bank_root(self) -> str:
+        """One digest binding the current bank's per-expert manifest
+        roots — the storage commitment a round's block records."""
+        roots = "".join(
+            self.expert_store.manifest(self._object_id(e),
+                                       self._bank_version).root
+            for e in range(self.cfg.num_experts))
+        return digest_bytes(roots.encode())
+
+    def _fetch_expert_manifest(self, manifest_cid: str):
+        """Auditor-side fetch: the exact expert version a round
+        committed against, named by its retained manifest CID (NOT a
+        version-number lookup — a chained-rollback replay republishes
+        voided version tags, and an open round's auditors must keep
+        fetching what was actually committed).  Every chunk is
+        CID-verified (a corrupted replica is skipped — verified refetch
+        from a healthy one) and reassembled chunk-for-chunk."""
+        return self.expert_store.fetch_manifest(
+            self.expert_store.manifest_by_cid(manifest_cid),
+            self._expert_like)
+
+    def _retain_round_manifests(self, version: int) -> List[str]:
+        """Pin the manifests a round committed against for the length of
+        its challenge window (the data-availability contract: auditors
+        must be able to fetch them until the round is terminal)."""
+        cids = []
+        for e in range(self.cfg.num_experts):
+            cid = self.expert_store.manifest_cid(self._object_id(e),
+                                                 version)
+            self.expert_store.retain(cid)
+            cids.append(cid)
+        return cids
+
+    def _run_da(self, now: Optional[int],
+                manifest_cids: Optional[List[str]] = None) -> None:
+        """One data-availability beat: challenge replica nodes for
+        sampled chunks of the given manifests, close past-due challenges
+        (``now=None``: all), and mine one ``da_slash`` block per
+        confirmed fault (withheld past the window, or a corrupted
+        replica — the latter also repaired by verified refetch)."""
+        if self.da is None:
+            return
+        n = len(self.da.faults)
+        if manifest_cids:
+            manifests = {}
+            for cid in manifest_cids:
+                man = self.expert_store.manifest_by_cid(cid)
+                manifests[man.object_id] = man
+            self.da.challenge_round(now, manifests)
+        self.da.resolve(now)
+        for f in self.da.faults[n:]:
+            self._mine({"kind": "da_slash", "node": f.executor,
+                        "object": f.object_id, "chunk": f.chunk_index,
+                        "cid": f.cid[:16], "fault": f.kind,
+                        "challenged_round": f.round_id})
+
+    def storage_report(self) -> Dict:
+        """Byte/transfer economy of the storage layer: network counters
+        (with *modeled* transfer seconds on the deterministic cost
+        model), chunk-dedup upload savings, edge-cache hit/miss/byte
+        counters, DA challenge stats, and the host wall-clock spent on
+        storage bookkeeping."""
+        return {"network": dict(self.storage.stats),
+                "store": dict(self.expert_store.stats),
+                "cache": (dict(self.edge_cache.stats)
+                          if self.edge_cache else None),
+                "da": dict(self.da.stats) if self.da else None,
+                "wall_s": self._timers["storage"]}
 
     # ------------------------------------------- optimistic verification
     def _sparse_routing(self, gate, x, gate_bias):
@@ -503,54 +735,53 @@ class BMoESystem:
             parts.append(np.concatenate(chunks, axis=0))
         return np.stack(parts)
 
-    def _make_recompute(self, experts, xin, cids: List[str],
-                        row_index=None):
+    def _make_recompute(self, xin, manifests: List[str], row_index=None):
         """Auditor-side recompute: fetch the sampled expert from the
-        storage layer by CID (content-addressed, so a tampered replica is
-        self-evident) and recompute the audited chunk on the published
-        task.  Under sparse dispatch the audited chunk is a slice of the
-        expert's capacity bucket and the committed ``row_index`` maps its
-        slots back to task rows (empty slots gather the zero sentinel) —
-        auditors re-derive the executor's buckets from the commitment,
-        never from the gate.  Single-process caveat: the executor and
-        auditor share memory here, so the put/get round-trip exercises
-        the mechanism (replication, CID verification), not an adversarial
-        network.  Evidence blobs live only while the round's challenge
-        window is open — they are pruned from storage once the round
-        finalizes or a court verdict resolves it (the compact fraud
-        proofs remain in the round state)."""
+        storage layer by the *manifest the round committed against*
+        (``manifests[e]`` — the CID list retained at commit, whose roots
+        are bound on-chain; every chunk is CID-verified, so a tampered
+        replica is self-evident and skipped) and recompute the audited
+        chunk on the published task.  Under sparse dispatch the audited
+        chunk is a slice of the expert's capacity bucket and the
+        committed ``row_index`` maps its slots back to task rows (empty
+        slots gather the zero sentinel) — auditors re-derive the
+        executor's buckets from the commitment, never from the gate.
+        The round retains its manifests at commit time and releases them
+        when it reaches a terminal phase (the data-availability
+        contract; superseded versions are then garbage collected, while
+        the compact fraud proofs remain in the round state)."""
         cache: Dict[int, object] = {}
         xpad = self._pad_task(xin, row_index)
 
         def recompute(e: int, sl: slice):
             if e not in cache:
-                p_e = jax.tree_util.tree_map(lambda a: a[e], experts)
-                cid = self.storage.put(serialize_tree(p_e))
-                cache[e] = self.storage.get_tree(cid, p_e)
-                cids.append(cid)
+                cache[e] = self._fetch_expert_manifest(manifests[e])
             rows = xpad[sl] if row_index is None else xpad[row_index[e, sl]]
             return np.asarray(self._apply_one(cache[e], jnp.asarray(rows)))
 
         return recompute
 
-    def _make_batched_recompute(self, experts, xin, cids: List[str],
+    def _make_batched_recompute(self, experts, xin, manifests: List[str],
                                 row_index=None):
         """Batched auditor recompute (``BatchRecomputeFn``): the same
-        fetch-by-CID semantics as ``_make_recompute`` — one storage
-        round-trip per sampled expert — but every sampled chunk of the
-        round is then recomputed in ONE jitted grouped call instead of a
-        Python-loop dispatch per (expert, slice).
+        fetch-by-manifest semantics as ``_make_recompute`` — one
+        chunk-verified storage fetch per sampled expert — but every
+        sampled chunk of the round is then recomputed in ONE jitted
+        grouped call instead of a Python-loop dispatch per (expert,
+        slice).
 
-        The CID round-trip per sampled expert is preserved — and
-        ``StorageNetwork.get`` hash-verifies every replica against its
-        CID, so a fetched tree is guaranteed byte-identical to the
-        committed expert (a tampered replica is skipped or raises).
-        That guarantee is what lets the grouped call read the already-
-        device-resident bank and task directly: only the per-sample row
-        indices and expert ids cross the host boundary, the expert and
-        row gathers fuse into the kernel, the bank shape is constant,
-        and the only jit-retrace axis is the sample count, bucketed to
-        a multiple of 4.  Padding rows never reach the leaf hashes.
+        The fetch per sampled expert is preserved — every chunk is
+        hash-verified against the committed manifest, so a fetched tree
+        is guaranteed byte-identical to the expert version the round
+        committed against (a tampered replica is skipped; a withheld
+        chunk raises ``ChunkUnavailableError`` — the DA-challengeable
+        fault).  That guarantee is what lets the grouped call read the
+        already-device-resident bank and task directly: only the
+        per-sample row indices and expert ids cross the host boundary,
+        the expert and row gathers fuse into the kernel, the bank shape
+        is constant, and the only jit-retrace axis is the sample count,
+        bucketed to a multiple of 4.  Padding rows never reach the leaf
+        hashes.
 
         The task transfer is deferred to the first call: under pipelined
         scheduling the host drains through the cross-round merged path
@@ -561,11 +792,8 @@ class BMoESystem:
 
         def fetch(e: int):
             if e not in fetched:
-                p_e = jax.tree_util.tree_map(lambda a: a[e], experts)
-                cid = self.storage.put(serialize_tree(p_e))
-                self.storage.get(cid)      # raises unless a replica's
-                fetched.add(e)             # bytes hash back to the CID
-                cids.append(cid)
+                self._fetch_expert_manifest(manifests[e])  # chunk-verified
+                fetched.add(e)
 
         def batch_recompute(expert_ids, slices):
             for e in sorted({int(e) for e in expert_ids}):
@@ -624,15 +852,16 @@ class BMoESystem:
         pub[:, ctx["executor"]] = claimed
         return pub
 
-    def _audit_jobs_merged(self, protocol, ctx_store, jobs: List[AuditJob],
-                           cid_store: Dict[int, List[str]]):
+    def _audit_jobs_merged(self, protocol, ctx_store,
+                           jobs: List[AuditJob]):
         """Audit a whole drained backlog through ONE grouped kernel call:
         the per-round expert-bank snapshots stack to ``(R*N, ...)``, the
         per-round tasks concatenate row-wise, and
         ``VerifierPool.audit_rounds`` fuses every sampled leaf of every
         drained round into a single recompute + one hash pass.  The
-        fetch-by-CID data-availability contract is kept per
-        (round, sampled expert)."""
+        fetch-by-manifest data-availability contract is kept per
+        (round, sampled expert) — each fetch resolves the version that
+        round committed against."""
         cfg = self.cfg
         ctxs = [ctx_store[j.round_id] for j in jobs]
         coms = [protocol.rounds[j.round_id].commitment for j in jobs]
@@ -666,11 +895,8 @@ class BMoESystem:
         def fetch(k: int, e: int):
             if (k, e) in fetched:
                 return
-            p_e = jax.tree_util.tree_map(lambda a: a[e], banks[k])
-            cid = self.storage.put(serialize_tree(p_e))
-            self.storage.get(cid)          # raises unless a replica's
-            fetched.add((k, e))            # bytes hash back to the CID
-            cid_store.setdefault(jobs[k].round_id, []).append(cid)
+            self._fetch_expert_manifest(ctxs[k]["manifests"][e])
+            fetched.add((k, e))
 
         def multi_fn(slot_ids, experts, slices):
             for k, e in sorted({(int(k), int(e))
@@ -712,7 +938,7 @@ class BMoESystem:
         t0 = time.perf_counter()
         if tc.audit_backend == "batched":
             reports_by_rid = self._audit_jobs_merged(protocol, ctx_store,
-                                                     jobs, cid_store)
+                                                     jobs)
         else:
             reports_by_rid = {
                 j.round_id: protocol.verifiers.audit(
@@ -760,7 +986,7 @@ class BMoESystem:
                 cfg.num_edges * cfg.num_experts \
                 * state.commitment.rows_per_expert
             for cid in cid_store.pop(rid, []):
-                self.storage.discard(cid)
+                self.expert_store.release(cid)
             if state.phase is RoundPhase.ROLLED_BACK:
                 summary["convicted"].append(rid)
 
@@ -803,17 +1029,27 @@ class BMoESystem:
             metrics = jax.tree_util.tree_map(np.asarray, metrics)
             self.verify_stats["base_evals"] += \
                 self._exec_evals(len(ctx["xin"]))
+            # the voided versions were built on revoked state: republish
+            # each replayed round's honest successor version in place
+            # (put_version replaces the same (object, version) tag).
+            # Full-bank republish, not just the replay's routed experts:
+            # the voided lineage may have routed (and published)
+            # DIFFERENT experts at this version tag, and every one of
+            # those must be overwritten — chunk dedup keeps the upload at
+            # the actually-changed bytes.
+            self._publish_bank(None, rid + 1)
         return metrics if chain and chain[-1] == self.round else None
 
     def _prune_closed_rounds(self, protocol, ctx_store, cid_store):
-        """Release snapshots and audit-evidence blobs of rounds that hit a
-        terminal phase (the compact fraud proofs stay in the round
-        state)."""
+        """Release snapshots and retained version manifests of rounds
+        that hit a terminal phase — a superseded version nobody retains
+        is garbage collected from the storage network (the compact fraud
+        proofs stay in the round state)."""
         for rid in list(ctx_store):
             if protocol.rounds[rid].phase in TERMINAL_PHASES:
                 del ctx_store[rid]
                 for cid in cid_store.pop(rid, []):
-                    self.storage.discard(cid)
+                    self.expert_store.release(cid)
 
     def _optimistic_round(self, x, y, atk, mask_e, rkey, executor, prev,
                           metrics, payload, gate_bias, active):
@@ -844,15 +1080,21 @@ class BMoESystem:
         if state.commitment.routing_digest:
             payload["routing"] = state.commitment.routing_digest[:16]
         payload["executor"] = executor
+        # data-availability contract: retain the expert versions this
+        # round committed against until its window closes, and challenge
+        # replica nodes for sampled chunks of exactly those manifests
+        manifests = self._retain_round_manifests(self.round)
+        self._audit_cids[self.round] = manifests
         self._round_ctx[self.round] = {
             "prev": prev, "x": x, "y": y, "xin": xin, "honest": honest,
             "rkey": rkey, "executor": executor,
             "mask_e": np.asarray(mask_e), "atk": atk,
             "gate_bias": gate_bias, "active": active,
+            "manifests": manifests,
         }
-        cids = self._audit_cids.setdefault(self.round, [])
-        recompute_fn = self._make_recompute(prev[1], xin, cids, row_index)
-        batch_fn = (self._make_batched_recompute(prev[1], xin, cids,
+        self._run_da(self.round, manifests)
+        recompute_fn = self._make_recompute(xin, manifests, row_index)
+        batch_fn = (self._make_batched_recompute(prev[1], xin, manifests,
                                                  row_index)
                     if tc.audit_backend == "batched" else None)
         self.protocol.schedule_audit(self.round, recompute_fn, batch_fn)
@@ -904,6 +1146,7 @@ class BMoESystem:
         out["finalized"] = self.protocol.advance(horizon)
         self._prune_closed_rounds(self.protocol, self._round_ctx,
                                   self._audit_cids)
+        self._run_da(None)               # close every open DA challenge
         if self._infer_protocol is not None:
             isummary = self._drain_trust(self._infer_protocol,
                                          self._infer_ctx,
@@ -980,6 +1223,12 @@ class BMoESystem:
             # (pipelined scheduling only; synchronous audits sit inside
             # consensus_s) — reported separately, excluded from total_s
             "audit_offpath_s": self._timers["audit"] / r,
+            # host wall-clock of the storage simulation (chunk hashing,
+            # cache resolution) — reported separately, excluded from
+            # total_s: the *transfer* time it simulates is already the
+            # modeled comm_s term (see storage_report() for the cost-
+            # model view)
+            "storage_s": self._timers["storage"] / r,
             "total_s": self._timers["compute"] / r + t_comm
                        + self._timers["consensus"] / r
                        + self._timers["chain"] / r,

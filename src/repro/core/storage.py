@@ -1,84 +1,19 @@
-"""Decentralized storage layer (IPFS-like, paper §IV-A(4)).
+"""Compatibility shim: the storage layer grew into ``repro.storage``.
 
-Content-addressed: the CID of an object is the SHA-256 of its serialized
-bytes, so any expert downloaded by CID can be verified against the CID
-recorded on-chain (tamper-evidence).  ``StorageNetwork`` replicates each
-object across ``replication`` storage nodes and can survive node loss.
+The toy single-blob module that lived here became a real subsystem —
+chunked content-addressed objects under Merkle chunk manifests, a
+versioned ``ExpertStore`` with chunk-level dedup, an edge-side
+``ExpertCache`` with gate-driven prefetch, and a replicated
+``StorageNetwork`` with a deterministic transfer cost model.  Existing
+imports (``repro.core.storage.StorageNetwork`` etc.) keep working.
 """
-from __future__ import annotations
+from repro.storage import (ChunkManifest, ChunkUnavailableError,  # noqa: F401
+                           ExpertCache, ExpertStore, GateEMA,
+                           NetworkCostModel, StorageNetwork, StorageNode,
+                           deserialize_tree, serialize_tree)
 
-import io
-import random
-from typing import Any, Dict, List, Optional
-
-import jax
-import numpy as np
-
-from repro.core.ledger import digest_bytes
-
-
-def serialize_tree(tree) -> bytes:
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    buf = io.BytesIO()
-    np.savez(buf, treedef=str(treedef),
-             **{f"leaf{i}": np.asarray(l) for i, l in enumerate(leaves)})
-    return buf.getvalue()
-
-
-def deserialize_tree(data: bytes, like) -> Any:
-    buf = io.BytesIO(data)
-    z = np.load(buf, allow_pickle=False)
-    leaves = [z[f"leaf{i}"] for i in range(len(z.files) - 1)]
-    _, treedef = jax.tree_util.tree_flatten(like)
-    return jax.tree_util.tree_unflatten(treedef, leaves)
-
-
-class StorageNode:
-    def __init__(self, node_id: int):
-        self.node_id = node_id
-        self.objects: Dict[str, bytes] = {}
-
-    def put(self, cid: str, data: bytes) -> None:
-        self.objects[cid] = data
-
-    def get(self, cid: str) -> Optional[bytes]:
-        return self.objects.get(cid)
-
-
-class StorageNetwork:
-    """A set of storage nodes with replication. ``put`` returns the CID."""
-
-    def __init__(self, num_nodes: int = 4, replication: int = 2, seed: int = 0):
-        self.nodes: List[StorageNode] = [StorageNode(i) for i in range(num_nodes)]
-        self.replication = min(replication, num_nodes)
-        self._rng = random.Random(seed)
-
-    def put(self, data: bytes) -> str:
-        cid = digest_bytes(data)
-        for node in self._rng.sample(self.nodes, self.replication):
-            node.put(cid, data)
-        return cid
-
-    def put_tree(self, tree) -> str:
-        return self.put(serialize_tree(tree))
-
-    def get(self, cid: str, verify: bool = True) -> bytes:
-        for node in self.nodes:
-            data = node.get(cid)
-            if data is not None:
-                if verify and digest_bytes(data) != cid:
-                    continue  # corrupted replica; try another node
-                return data
-        raise KeyError(f"CID {cid[:12]}... not found on any storage node")
-
-    def get_tree(self, cid: str, like) -> Any:
-        return deserialize_tree(self.get(cid), like)
-
-    def discard(self, cid: str) -> None:
-        """Drop an object from every node — e.g. audit evidence whose
-        data-availability window (the challenge window) has closed."""
-        for node in self.nodes:
-            node.objects.pop(cid, None)
-
-    def drop_node(self, node_id: int) -> None:
-        self.nodes = [n for n in self.nodes if n.node_id != node_id]
+__all__ = [
+    "ChunkManifest", "ChunkUnavailableError", "ExpertCache", "ExpertStore",
+    "GateEMA", "NetworkCostModel", "StorageNetwork", "StorageNode",
+    "deserialize_tree", "serialize_tree",
+]

@@ -106,11 +106,17 @@ def grouped_mlp(buf, w_gate, w_up, w_down, shard=None):
     return jnp.einsum("becf,efd->becd", h, w_down)
 
 
-def moe_mlp(params, x, cfg, shard=None, trust=None):
+def moe_mlp(params, x, cfg, shard=None, trust=None, return_stats=False):
     """x: (B, S, d) -> (B, S, d), plus aux loss.
 
     ``trust``: optional hook applied to the routed-expert output buffer —
-    the B-MoE redundancy + consensus vote."""
+    the B-MoE redundancy + consensus vote.
+
+    ``return_stats``: also return the per-expert routed-token counts
+    ``(E,)`` (drops included — a dropped assignment still computed its
+    bucket, so its expert's parameters were needed).  This is the gate
+    statistic the serving engine's edge cache feeds its EMA prefetcher
+    with; default off so existing (y, aux) call sites are untouched."""
     B, S, d = x.shape
     k = cfg.num_experts_per_tok
     E = cfg.resolved_padded_experts
@@ -149,4 +155,7 @@ def moe_mlp(params, x, cfg, shard=None, trust=None):
     if cfg.num_shared_experts:
         sp = params["shared"]
         y = y + (jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])) @ sp["w_down"]
+    if return_stats:
+        counts = jnp.zeros(E, jnp.int32).at[eid.reshape(-1)].add(1)
+        return y, aux * cfg.router_aux_weight, counts
     return y, aux * cfg.router_aux_weight

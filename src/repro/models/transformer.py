@@ -202,7 +202,8 @@ def forward_train(params, tokens, cfg: ModelConfig, *, shard=None,
     return logits, aux
 
 
-def _layer_decode(spec: LayerSpec, p, cache, x, pos, cfg, shard):
+def _layer_decode(spec: LayerSpec, p, cache, x, pos, cfg, shard,
+                  expert_stats=False):
     h = rmsnorm(x, p["norm1"], cfg.norm_eps)
     if spec.kind in ("attn", "local_attn"):
         window = cfg.sliding_window if spec.kind == "local_attn" else 0
@@ -215,45 +216,76 @@ def _layer_decode(spec: LayerSpec, p, cache, x, pos, cfg, shard):
         y, new_cache = ssm_lib.ssm_decode(p["ssm"], h, cache, cfg,
                                           shard=shard)
     x = x + y
+    counts = None
     if spec.mlp != "none":
         h = rmsnorm(x, p["norm2"], cfg.norm_eps)
         if spec.mlp == "moe":
-            y, _ = moe_lib.moe_mlp(p["moe"], h, cfg, shard=shard)
+            if expert_stats:
+                y, _, counts = moe_lib.moe_mlp(p["moe"], h, cfg, shard=shard,
+                                               return_stats=True)
+            else:
+                y, _ = moe_lib.moe_mlp(p["moe"], h, cfg, shard=shard)
         else:
             y = swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
                        p["mlp"]["w_down"], shard=shard)
         x = x + y
-    return x, new_cache
+    return x, new_cache, counts
 
 
 def forward_decode(params, caches, tokens, pos, cfg: ModelConfig, *,
-                   shard=None, unroll=False):
+                   shard=None, unroll=False, expert_stats=False):
     """One decode step.  tokens: (B, 1); pos: scalar int32 (absolute
-    position of this token).  Returns (logits (B, 1, V), new_caches)."""
+    position of this token).  Returns (logits (B, 1, V), new_caches) —
+    plus, with ``expert_stats``, the per-MoE-layer routed-token counts
+    ``(num_moe_layers, E)`` in layer order (scanned blocks first, then
+    the remainder): the gate statistics a serving edge feeds its expert
+    cache/prefetcher with."""
     x = jnp.take(params["embed"], tokens, axis=0)
     if shard is not None:
         x = shard(x, "batch", "seq", "embed")
+    n_moe_blk = sum(1 for s in cfg.block_pattern if s.mlp == "moe")
 
     def body(x, inp):
         blk, cch = inp
         new_cch = {}
+        cnts = []
         for i, spec in enumerate(cfg.block_pattern):
-            x, new_cch[str(i)] = _layer_decode(spec, blk[str(i)], cch[str(i)],
-                                               x, pos, cfg, shard)
-        return x, new_cch
+            x, new_cch[str(i)], c = _layer_decode(
+                spec, blk[str(i)], cch[str(i)], x, pos, cfg, shard,
+                expert_stats=expert_stats)
+            if c is not None:
+                cnts.append(c)
+        if expert_stats and cnts:
+            return x, (new_cch, jnp.stack(cnts))
+        return x, (new_cch, None) if expert_stats else new_cch
 
-    x, new_block_caches = scan_or_unroll(
-        body, x, (params["blocks"], caches["blocks"]), unroll)
+    x, ys = scan_or_unroll(body, x, (params["blocks"], caches["blocks"]),
+                           unroll)
+    if expert_stats:
+        new_block_caches, blk_counts = ys
+        counts = ([blk_counts.reshape(-1, blk_counts.shape[-1])]
+                  if n_moe_blk else [])
+    else:
+        new_block_caches = ys
+        counts = []
     new_caches = {"blocks": new_block_caches}
     if cfg.remainder:
         new_caches["remainder"] = []
         for i, spec in enumerate(cfg.remainder):
-            x, nc = _layer_decode(spec, params["remainder"][i],
-                                  caches["remainder"][i], x, pos, cfg, shard)
+            x, nc, c = _layer_decode(spec, params["remainder"][i],
+                                     caches["remainder"][i], x, pos, cfg,
+                                     shard, expert_stats=expert_stats)
             new_caches["remainder"].append(nc)
+            if c is not None:
+                counts.append(c[None])
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
     logits = x @ head
+    if expert_stats:
+        stats = (jnp.concatenate(counts, axis=0) if counts
+                 else jnp.zeros((0, max(cfg.resolved_padded_experts, 1)),
+                                jnp.int32))
+        return logits, new_caches, stats
     return logits, new_caches
 
 

@@ -33,6 +33,8 @@ import numpy as np
 from repro.models import transformer as tfm
 from repro.models.builder import materialize
 from repro.models.config import ModelConfig
+from repro.storage import (ExpertCache, ExpertStore, GateEMA,
+                           StorageNetwork)
 from repro.train.step import make_decode_step
 from repro.trust.audit import VerifierPool
 from repro.trust.commitments import MerkleTree, RoundCommitment, leaf_digest
@@ -56,6 +58,113 @@ class SlotState:
     @property
     def prefilling(self) -> bool:
         return self.cursor < len(self.prompt)
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeStorageConfig:
+    """Serving-edge expert storage (paper: the edge layer "employs the
+    activated experts downloaded from the storage layer").
+
+    With this config the engine registers every MoE layer's per-expert
+    weights as chunked content-addressed objects in a ``StorageNetwork``
+    and resolves, each tick, exactly the experts that tick routed to
+    through a bounded ``ExpertCache`` — cold ticks fetch, warm ticks hit
+    (serving params are frozen, so the manifests never go stale).  A
+    ``GateEMA`` over the per-tick routing counts drives prefetch of the
+    hottest experts into spare cache capacity."""
+    cache_bytes: Optional[int] = None      # None: unbounded
+    chunk_bytes: int = 1 << 15
+    prefetch_topk: int = 0
+    ema_decay: float = 0.8
+    num_nodes: int = 4
+    replication: int = 2
+    seed: int = 0
+
+
+class _EdgeExpertRuntime:
+    """The engine's storage-layer sidecar: per-(MoE layer, expert) units
+    registered once at startup, resolved per tick from the decode step's
+    routing counts (layer order identical to
+    ``transformer.forward_decode(expert_stats=True)``: scanned blocks
+    block-major, then the remainder)."""
+
+    def __init__(self, cfg: ModelConfig, params, scfg: EdgeStorageConfig):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.network = StorageNetwork(num_nodes=scfg.num_nodes,
+                                      replication=scfg.replication,
+                                      seed=scfg.seed)
+        self.store = ExpertStore(self.network, chunk_bytes=scfg.chunk_bytes)
+        self.cache = ExpertCache(self.store, scfg.cache_bytes)
+        self._like: List[Dict] = []           # per layer: one unit template
+        self._n_real = cfg.num_experts
+        self._register(params)
+        self.ema = GateEMA(len(self._like) * self._n_real,
+                           decay=scfg.ema_decay)
+        self.ticks = 0
+
+    @property
+    def num_layers(self) -> int:
+        return len(self._like)
+
+    def _unit_id(self, layer: int, expert: int) -> str:
+        return f"moe/{layer}/{expert}"
+
+    def _register(self, params) -> None:
+        """Chunk every (layer, expert) unit into the storage network
+        (version 0 — serving weights are frozen).  Router and shared-
+        expert weights stay gate-side resident: they run every tick."""
+        def units_of(moe_params):
+            # routed-expert weights only: (E, ...) leading expert axis
+            routed = {k: np.asarray(moe_params[k])
+                      for k in ("w_gate", "w_up", "w_down")}
+            layer = len(self._like)
+            self._like.append({k: a[0] for k, a in routed.items()})
+            for e in range(self._n_real):
+                self.store.put_version(self._unit_id(layer, e),
+                                       {k: a[e] for k, a in routed.items()},
+                                       0)
+
+        nb = self.cfg.resolved_num_blocks
+        blocks = params.get("blocks", {})
+        for b in range(nb):
+            for i, spec in enumerate(self.cfg.block_pattern):
+                if spec.mlp == "moe":
+                    units_of(jax.tree_util.tree_map(
+                        lambda a: a[b], blocks[str(i)]["moe"]))
+        for i, spec in enumerate(self.cfg.remainder):
+            if spec.mlp == "moe":
+                units_of(params["remainder"][i]["moe"])
+
+    def on_tick(self, stats: np.ndarray) -> None:
+        """Resolve the experts this tick activated (pinned during the
+        resolve), feed the EMA, and prefetch the hottest units into
+        spare capacity."""
+        stats = np.asarray(stats)[:, :self._n_real]
+        flat = stats.reshape(-1).astype(np.float64)
+        active = [(int(l), int(e)) for l, e in zip(*np.nonzero(stats))]
+        ids = [self._unit_id(l, e) for l, e in active]
+        self.cache.pin(ids)
+        try:
+            for (layer, e), oid in zip(active, ids):
+                self.cache.get(oid, 0, self._like[layer])
+            self.ema.update(flat)
+            if self.scfg.prefetch_topk:
+                ranked = [self._unit_id(u // self._n_real, u % self._n_real)
+                          for u in self.ema.ranking()[:self.scfg.prefetch_topk]]
+                self.cache.prefetch(
+                    ranked, 0,
+                    lambda oid: self._like[int(oid.split("/")[1])])
+        finally:
+            self.cache.unpin(ids)
+        self.ticks += 1
+
+    def report(self) -> Dict:
+        return {"cache": dict(self.cache.stats),
+                "store": dict(self.store.stats),
+                "network": dict(self.network.stats),
+                "units": len(self._like) * self._n_real,
+                "ticks": self.ticks}
 
 
 def _tick_leaf(request_id: int, tick: int, token: int) -> str:
@@ -106,7 +215,8 @@ class SessionRecord:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
                  cache_len: int = 256, mesh=None,
-                 trust: Optional[TrustConfig] = None):
+                 trust: Optional[TrustConfig] = None,
+                 expert_storage: Optional[EdgeStorageConfig] = None):
         if cfg.is_encoder_decoder:
             raise NotImplementedError("engine drives decoder-only archs")
         self.cfg = cfg
@@ -116,7 +226,19 @@ class ServingEngine:
         self.caches = materialize(
             tfm.cache_decl(cfg, batch_slots, cache_len),
             jax.random.PRNGKey(0))
-        self._decode = jax.jit(make_decode_step(cfg, mesh))
+        # ---- edge expert storage (MoE models): per-tick resolution of
+        # the activated experts through a bounded ExpertCache, fed by
+        # the decode step's routing counts
+        self.edge = None
+        if expert_storage is not None:
+            has_moe = any(s.mlp == "moe"
+                          for s in list(cfg.block_pattern)
+                          + list(cfg.remainder))
+            if not has_moe:
+                raise ValueError("expert_storage needs a MoE model")
+            self.edge = _EdgeExpertRuntime(cfg, params, expert_storage)
+        self._decode = jax.jit(make_decode_step(
+            cfg, mesh, expert_stats=self.edge is not None))
         self.slots = [SlotState() for _ in range(batch_slots)]
         self.queue: deque = deque()
         self.tick = 0
@@ -302,9 +424,15 @@ class ServingEngine:
             elif s.generated:
                 tokens[i, 0] = s.generated[-1]
         pos = max((s.pos for s in self.slots if s.active), default=0)
-        nxt, self.caches = self._decode(
-            self.params, self.caches,
-            {"tokens": jnp.asarray(tokens), "pos": jnp.int32(pos)})
+        batch = {"tokens": jnp.asarray(tokens), "pos": jnp.int32(pos)}
+        if self.edge is not None:
+            nxt, self.caches, stats = self._decode(self.params, self.caches,
+                                                   batch)
+            # resolve THIS tick's activated experts through the edge
+            # cache (cold: chunk fetches; warm: hits) + EMA prefetch
+            self.edge.on_tick(np.asarray(stats))
+        else:
+            nxt, self.caches = self._decode(self.params, self.caches, batch)
         nxt = np.asarray(nxt)
         self.tick += 1
         for i, s in enumerate(self.slots):

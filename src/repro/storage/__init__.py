@@ -1,0 +1,32 @@
+"""Decentralized storage layer (paper §IV-A(4)) as a real subsystem.
+
+- ``chunks``: per-leaf fixed-size chunking under Merkle chunk manifests
+  (the manifest root is the CID recorded on-chain), plus the legacy
+  whole-tree npz blob serialization.
+- ``network``: replicated content-addressed storage nodes with a
+  randomized (seeded) replica read order, a deterministic
+  bandwidth/latency cost model, and fault injection
+  (corrupt/withhold) for the data-availability challenges.
+- ``store``: ``ExpertStore`` — per-object *versioned* manifests keyed by
+  training round with chunk-level dedup uploads and window-scoped
+  retention/garbage collection.
+- ``cache``: ``ExpertCache`` — the edge device's bounded-byte LRU of
+  deserialized experts (pin-while-activated, hit/miss/evict/byte
+  counters) with ``GateEMA`` gate-statistics-driven prefetch.
+"""
+from repro.storage.cache import ExpertCache, GateEMA
+from repro.storage.chunks import (DEFAULT_CHUNK_BYTES, ChunkManifest,
+                                  LeafSpec, assemble_tree, build_manifest,
+                                  deserialize_tree, serialize_tree,
+                                  split_chunks)
+from repro.storage.network import (NetworkCostModel, ReplicaFault,
+                                   StorageNetwork, StorageNode)
+from repro.storage.store import ChunkUnavailableError, ExpertStore
+
+__all__ = [
+    "ExpertCache", "GateEMA",
+    "DEFAULT_CHUNK_BYTES", "ChunkManifest", "LeafSpec", "assemble_tree",
+    "build_manifest", "deserialize_tree", "serialize_tree", "split_chunks",
+    "NetworkCostModel", "ReplicaFault", "StorageNetwork", "StorageNode",
+    "ChunkUnavailableError", "ExpertStore",
+]

@@ -1,0 +1,218 @@
+"""Decentralized storage network (IPFS-like, paper §IV-A(4)).
+
+Content-addressed: the CID of an object is the SHA-256 of its bytes, so
+anything downloaded by CID can be verified against the CID recorded
+on-chain (tamper-evidence).  ``StorageNetwork`` replicates each object
+across ``replication`` nodes, survives node loss up to the replication
+factor, and serves reads from a per-request *randomized* replica order
+(seeded — deterministic across runs, but no node absorbs all reads).
+
+Transfer cost is modeled, not just wall-clocked: every put/get accrues
+``latency + bytes/bandwidth`` seconds on a deterministic
+``NetworkCostModel``, so benchmarks can report byte and time economies
+that do not depend on the host machine.
+
+Fault injection (for the storage/serving fault suite and the
+data-availability challenges in ``repro.trust.da``): a replica can be
+*corrupted* (bytes flipped — detected by CID verification, served
+around) or *withheld* (the node refuses to produce the bytes — the
+DA-challengeable fault).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Optional
+
+from repro.core.ledger import digest_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkCostModel:
+    """Deterministic per-request transfer cost: latency + bytes/bw."""
+    bandwidth_bytes_per_s: float = 125e6       # 1 Gbps links
+    latency_s: float = 2e-3
+
+    def seconds(self, nbytes: int) -> float:
+        return self.latency_s + nbytes / self.bandwidth_bytes_per_s
+
+
+@dataclasses.dataclass
+class ReplicaFault:
+    """One observed bad replica: a get() that had to skip a node."""
+    cid: str
+    node_id: int
+    kind: str                                  # "corrupted" | "withheld"
+
+
+class StorageNode:
+    def __init__(self, node_id: int):
+        self.node_id = node_id
+        self.objects: Dict[str, bytes] = {}
+        self.withheld: set = set()             # cids the node refuses to serve
+        self.reads = 0                         # served (healthy) reads
+
+    def put(self, cid: str, data: bytes) -> None:
+        self.objects[cid] = data
+
+    def get(self, cid: str) -> Optional[bytes]:
+        if cid in self.withheld:
+            return None
+        return self.objects.get(cid)
+
+    def holds(self, cid: str) -> bool:
+        """Committed to holding the object (withholding doesn't erase
+        the commitment — that is exactly the DA-challengeable state)."""
+        return cid in self.objects or cid in self.withheld
+
+
+class StorageNetwork:
+    """A set of storage nodes with replication. ``put`` returns the CID."""
+
+    def __init__(self, num_nodes: int = 4, replication: int = 2,
+                 seed: int = 0, cost: Optional[NetworkCostModel] = None):
+        self.nodes: List[StorageNode] = [StorageNode(i) for i in range(num_nodes)]
+        self.replication = min(replication, num_nodes)
+        # placement and read-scan orders draw from SEPARATE seeded
+        # streams: the number of reads performed must never perturb
+        # where later objects are placed (determinism across call
+        # patterns that differ only in read count)
+        self._place_rng = random.Random(seed)
+        self._scan_rng = random.Random((seed << 1) ^ 0x5DEECE66D)
+        self.cost = cost or NetworkCostModel()
+        self.faults: List[ReplicaFault] = []
+        # CIDs a read observed a bad replica of: a later re-offer of the
+        # verified bytes heals those copies (see put)
+        self._suspect: set = set()
+        self.stats = {"put_requests": 0, "put_bytes": 0, "dedup_puts": 0,
+                      "healed_puts": 0, "get_requests": 0, "get_bytes": 0,
+                      "modeled_put_s": 0.0, "modeled_get_s": 0.0}
+
+    # ------------------------------------------------------------ write
+    def put(self, data: bytes) -> str:
+        cid = digest_bytes(data)
+        if self.has(cid):
+            # content-addressed dedup: the bytes are already replicated,
+            # nothing crosses the network.  If a reader has reported a
+            # bad replica of this CID, the re-offered (verified) bytes
+            # heal the corrupted copies instead of being dropped — an
+            # honest re-upload must never be silently discarded just
+            # because a poisoned key exists.
+            if cid in self._suspect:
+                for node in self.nodes:
+                    if cid in node.objects \
+                            and digest_bytes(node.objects[cid]) != cid:
+                        node.put(cid, data)
+                        self.stats["healed_puts"] += 1
+                self._suspect.discard(cid)
+            self.stats["dedup_puts"] += 1
+            return cid
+        for node in self._place_rng.sample(self.nodes, self.replication):
+            node.put(cid, data)
+            self.stats["put_requests"] += 1
+            self.stats["put_bytes"] += len(data)
+            self.stats["modeled_put_s"] += self.cost.seconds(len(data))
+        return cid
+
+    def put_tree(self, tree) -> str:
+        from repro.storage.chunks import serialize_tree
+        return self.put(serialize_tree(tree))
+
+    # ------------------------------------------------------------- read
+    def has(self, cid: str) -> bool:
+        return any(cid in n.objects for n in self.nodes)
+
+    def replicas(self, cid: str) -> List[int]:
+        """Nodes committed to holding the object (withholding included)."""
+        return [n.node_id for n in self.nodes if n.holds(cid)]
+
+    def get(self, cid: str, verify: bool = True) -> bytes:
+        """Fetch by CID: probe replicas in a per-request randomized order
+        (seeded), skip corrupted/withheld copies (recording the fault),
+        and serve the first copy whose bytes hash back to the CID — the
+        verified-refetch path a tampered replica triggers."""
+        found = False
+        for node in self._scan_rng.sample(self.nodes, len(self.nodes)):
+            data = node.get(cid)
+            if data is None:
+                if node.holds(cid):            # committed but not serving
+                    self.faults.append(ReplicaFault(cid, node.node_id,
+                                                    "withheld"))
+                continue
+            found = True
+            if verify and digest_bytes(data) != cid:
+                self.faults.append(ReplicaFault(cid, node.node_id,
+                                                "corrupted"))
+                self._suspect.add(cid)         # heal on the next re-offer
+                continue                       # try another replica
+            node.reads += 1
+            self.stats["get_requests"] += 1
+            self.stats["get_bytes"] += len(data)
+            self.stats["modeled_get_s"] += self.cost.seconds(len(data))
+            return data
+        kind = "corrupted on every replica" if found else "not found"
+        raise KeyError(f"CID {cid[:12]}... {kind} on any storage node")
+
+    def get_tree(self, cid: str, like):
+        from repro.storage.chunks import deserialize_tree
+        return deserialize_tree(self.get(cid), like)
+
+    def read_load(self) -> List[int]:
+        """Per-node served-read counters (load-balance regression)."""
+        return [n.reads for n in self.nodes]
+
+    # ------------------------------------------------------ maintenance
+    def discard(self, cid: str) -> None:
+        """Drop an object from every node — e.g. a superseded expert
+        version whose data-availability window (the challenge window)
+        has closed."""
+        for node in self.nodes:
+            node.objects.pop(cid, None)
+            node.withheld.discard(cid)
+
+    def drop_node(self, node_id: int) -> None:
+        self.nodes = [n for n in self.nodes if n.node_id != node_id]
+
+    def repair(self, cid: str, node_id: int) -> bool:
+        """Overwrite a node's replica with verified bytes refetched from
+        a healthy replica (the recovery step after a corrupted-replica
+        fault).  Returns False when no healthy replica remains."""
+        try:
+            data = self.get(cid)
+        except KeyError:
+            return False
+        for node in self.nodes:
+            if node.node_id == node_id:
+                node.put(cid, data)
+                node.withheld.discard(cid)
+                return True
+        return False
+
+    # -------------------------------------------------- fault injection
+    def node(self, node_id: int) -> StorageNode:
+        for n in self.nodes:
+            if n.node_id == node_id:
+                return n
+        raise KeyError(f"no node {node_id}")
+
+    def corrupt_replica(self, cid: str, node_id: int) -> None:
+        """Bit-flip one node's copy (CID verification will catch it)."""
+        node = self.node(node_id)
+        if cid not in node.objects:
+            raise KeyError(f"node {node_id} holds no replica of "
+                           f"{cid[:12]}...")
+        data = bytearray(node.objects[cid])
+        if data:
+            data[0] ^= 0xFF
+        else:
+            data = bytearray(b"\x00")
+        node.objects[cid] = bytes(data)
+
+    def withhold(self, cid: str, node_id: Optional[int] = None) -> None:
+        """Make replica(s) refuse to serve the object while still being
+        committed to it — the data-availability fault."""
+        for node in self.nodes:
+            if node_id is not None and node.node_id != node_id:
+                continue
+            if cid in node.objects:
+                node.withheld.add(cid)

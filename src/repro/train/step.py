@@ -111,7 +111,11 @@ def make_prefill_step(cfg: ModelConfig, mesh=None, unroll=False):
     return prefill_step
 
 
-def make_decode_step(cfg: ModelConfig, mesh=None, unroll=False):
+def make_decode_step(cfg: ModelConfig, mesh=None, unroll=False,
+                     expert_stats=False):
+    """``expert_stats=True`` (decoder-only MoE models) makes the step
+    also return the per-MoE-layer routed-token counts — what the serving
+    engine's edge expert cache resolves activated experts from."""
     from repro.sharding import use_fsdp
     shard = Sharder(mesh, logical_rules(mesh, cfg),
                     fsdp=use_fsdp(cfg, "decode",
@@ -124,6 +128,11 @@ def make_decode_step(cfg: ModelConfig, mesh=None, unroll=False):
             logits, caches = encdec.forward_decode(params, caches, tokens,
                                                    pos, cfg, shard=shard,
                                                    unroll=unroll)
+        elif expert_stats:
+            logits, caches, stats = tfm.forward_decode(
+                params, caches, tokens, pos, cfg, shard=shard,
+                unroll=unroll, expert_stats=True)
+            return logits[:, -1].argmax(axis=-1), caches, stats
         else:
             logits, caches = tfm.forward_decode(params, caches, tokens, pos,
                                                 cfg, shard=shard,

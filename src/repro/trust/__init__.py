@@ -30,6 +30,10 @@ Modules
 - ``protocol``: the round state machine (commit -> optimistic accept ->
   async challenge window -> finalize/rollback) gluing the above to the
   ledger.
+- ``da`` (import directly — not re-exported here, it depends on
+  ``repro.storage`` which itself imports this package): data-availability
+  challenges holding storage replica nodes to the chunks they committed
+  to store; withheld chunks past the challenge window slash the node.
 """
 from repro.trust.audit import (AuditPlan, AuditReport, BatchRecomputeFn,
                                FraudProof, MultiBatchRecomputeFn,

@@ -217,17 +217,17 @@ def test_sparse_batched_audits_bit_identical_to_eager(data):
 
 def test_auditors_rederive_buckets_from_committed_routing(data):
     """Every honest sparse leaf recomputes bit-identically from only the
-    commitment's routing indices + the published task (the executor's
-    gate is never consulted): per-leaf digests match the committed
-    ones."""
+    commitment's routing indices + the published task + the expert
+    version fetched from the storage layer by its on-chain manifest (the
+    executor's gate — and its live bank — are never consulted): per-leaf
+    digests match the committed ones."""
     from repro.trust.commitments import leaf_digest
     xtr, ytr, _, _ = data
     s = BMoESystem(_cfg("sparse"))
-    bank0 = jax.tree_util.tree_map(lambda a: a.copy(), s.experts)
     xin = np.asarray(xtr[:48])
     s.train_round(xin, ytr[:48])
     com = s.protocol.rounds[0].commitment
-    recompute = s._make_recompute(bank0, xin, [], com.row_index)
+    recompute = s._make_recompute(xin, s._audit_cids[0], com.row_index)
     for leaf in range(com.num_leaves):
         e, _, sl = com.leaf_coords(leaf)
         assert leaf_digest(recompute(e, sl)) == com.leaf_digests[leaf]
