@@ -30,13 +30,12 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import row, timed
 from repro.core import experts as ex
 from repro.kernels import ops as kops
 from repro.trust.audit import VerifierPool, pack_audit_batch
@@ -112,12 +111,13 @@ def main(rounds: int = 30, json_path: str = "BENCH_audit.json",
     t_eager, t_batched = float("inf"), float("inf")
     eager_reports = batched_reports = None
     for _ in range(trials):                # interleaved; min kills spikes
-        t0 = time.perf_counter()
-        eager_reports = [pool.audit(com, eager_fn) for com in coms]
-        t_eager = min(t_eager, time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        batched_reports = [pool.audit_batched(com, batch_fn) for com in coms]
-        t_batched = min(t_batched, time.perf_counter() - t0)
+        with timed("audit.eager") as te:
+            eager_reports = [pool.audit(com, eager_fn) for com in coms]
+        t_eager = min(t_eager, te.seconds)
+        with timed("audit.batched") as tb:
+            batched_reports = [pool.audit_batched(com, batch_fn)
+                               for com in coms]
+        t_batched = min(t_batched, tb.seconds)
 
     # sanity: the two paths must agree before a speedup means anything
     for evs, bvs in zip(eager_reports, batched_reports):

@@ -4,22 +4,94 @@ Every benchmark prints CSV rows ``name,us_per_call,derived`` where
 ``derived`` carries the figure-specific metric (accuracy, ratio, ...).
 Rounds are reduced vs the paper's 1500 (CPU container); the attack
 dynamics they validate are the paper's.  REPRO_BENCH_ROUNDS overrides.
+
+All benchmark wall-clock goes through the ``timed``/``best_of``/
+``avg_us`` helpers below, backed by the module-wide ``BENCH_METRICS``
+registry (``repro.obs``): every timed block accumulates seconds on a
+``bench.{name}_s`` counter and observes into a ``bench.{name}.block_s``
+histogram, so scripts get totals and p50/p99 for free.  This module and
+``src/repro/obs/`` are the only places allowed to call
+``time.perf_counter`` directly — CI lints other call sites.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 import time
 
+import jax
 import numpy as np
 
 from repro.core.attacks import AttackConfig
 from repro.core.bmoe import BMoEConfig, BMoESystem
 from repro.data.synthetic import CIFAR10, FMNIST, make_image_dataset
+from repro.obs import MetricsRegistry
 
 ROUNDS = int(os.environ.get("REPRO_BENCH_ROUNDS", "120"))
 BATCH = 256  # samples per published task (paper: 1000)
 
+BENCH_METRICS = MetricsRegistry()
+
 _DATA_CACHE = {}
+
+
+class _Timed:
+    """Result cell for ``timed``: ``.seconds`` is set on block exit."""
+    __slots__ = ("seconds",)
+
+    def __init__(self):
+        self.seconds = 0.0
+
+
+@contextlib.contextmanager
+def timed(name: str, registry: MetricsRegistry | None = None):
+    """Time a block into the bench registry (and yield the seconds).
+
+    ``with timed("sched.pipelined") as t: ...`` accumulates ``t.seconds``
+    onto the ``bench.sched.pipelined_s`` counter and observes the block
+    into the ``bench.sched.pipelined.block_s`` histogram.
+    """
+    reg = registry if registry is not None else BENCH_METRICS
+    cell = _Timed()
+    t0 = time.perf_counter()
+    try:
+        yield cell
+    finally:
+        cell.seconds = time.perf_counter() - t0
+        reg.counter(f"bench.{name}_s").add(cell.seconds)
+        reg.histogram(f"bench.{name}.block_s").observe(cell.seconds)
+
+
+def timer_value(name: str, registry: MetricsRegistry | None = None) -> float:
+    """Accumulated seconds on the ``bench.{name}_s`` counter."""
+    reg = registry if registry is not None else BENCH_METRICS
+    return float(reg.value(f"bench.{name}_s"))
+
+
+def best_of(fn, trials: int = 3, name: str = "probe",
+            registry: MetricsRegistry | None = None) -> float:
+    """Best (min) wall seconds of ``fn()`` over ``trials`` runs — the
+    standard spike-killing probe; every trial is still observed into the
+    registry."""
+    best = float("inf")
+    for _ in range(trials):
+        with timed(name, registry) as t:
+            fn()
+        best = min(best, t.seconds)
+    return best
+
+
+def avg_us(fn, *args, iters: int = 20, name: str = "kernel",
+           registry: MetricsRegistry | None = None) -> float:
+    """Average microseconds per call of a jit'd ``fn(*args)``: one
+    warmup/compile call (blocked on), then ``iters`` timed calls."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    with timed(name, registry) as t:
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+    return t.seconds / iters * 1e6
 
 
 def dataset(kind: str):
@@ -55,16 +127,15 @@ def train_system(system: BMoESystem, kind: str, rounds: int,
     xtr, ytr, xte, yte = dataset(kind)
     rng = np.random.default_rng(system.cfg.seed)
     curve = []
-    t0 = time.perf_counter()
-    for r in range(rounds):
-        idx = rng.integers(0, len(xtr), BATCH)
-        system.train_round(xtr[idx], ytr[idx], attack=attack)
-        if eval_every and (r % eval_every == 0 or r == rounds - 1):
-            acc = system.evaluate(xte[:600], yte[:600],
-                                  attack=AttackConfig())
-            curve.append((r, acc))
-    wall = time.perf_counter() - t0
-    return curve, wall
+    with timed(f"train.{system.cfg.framework}.{kind}") as t:
+        for r in range(rounds):
+            idx = rng.integers(0, len(xtr), BATCH)
+            system.train_round(xtr[idx], ytr[idx], attack=attack)
+            if eval_every and (r % eval_every == 0 or r == rounds - 1):
+                acc = system.evaluate(xte[:600], yte[:600],
+                                      attack=AttackConfig())
+                curve.append((r, acc))
+    return curve, t.seconds
 
 
 def row(name: str, us_per_call: float, derived) -> str:

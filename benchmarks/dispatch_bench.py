@@ -32,11 +32,10 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import numpy as np
 
-from benchmarks.common import dataset, row
+from benchmarks.common import best_of, dataset, row, timed
 from repro.core.attacks import AttackConfig
 from repro.core.bmoe import BMoEConfig, BMoESystem, sparse_capacity
 from repro.core.ledger import digest_tree
@@ -112,9 +111,9 @@ def main(rounds: int = 20, json_path: str = "BENCH_dispatch.json",
     losses = {"dense": [], "sparse": []}
     for idx in batches:
         for name, s in (("dense", dense), ("sparse", sparse)):
-            t0 = time.perf_counter()
-            m = s.train_round(xtr[idx], ytr[idx])
-            walls[name] += time.perf_counter() - t0
+            with timed(f"dispatch.{name}.train") as t:
+                m = s.train_round(xtr[idx], ytr[idx])
+            walls[name] += t.seconds
             losses[name].append(float(m["loss"]))
     dense.flush_trust()
     sparse.flush_trust()
@@ -127,12 +126,9 @@ def main(rounds: int = 20, json_path: str = "BENCH_dispatch.json",
     infer_s = {}
     for name, s in (("dense", dense), ("sparse", sparse)):
         s.infer(xte[:BATCH], commit=False)          # warmup/compile
-        best = float("inf")
-        for _ in range(trials):
-            t0 = time.perf_counter()
-            s.infer(xte[:BATCH], commit=False)
-            best = min(best, time.perf_counter() - t0)
-        infer_s[name] = best
+        infer_s[name] = best_of(
+            lambda s=s: s.infer(xte[:BATCH], commit=False),
+            trials=trials, name=f"dispatch.{name}.infer")
 
     vd = dense.verification_report()
     vs = sparse.verification_report()

@@ -4,23 +4,15 @@ blockwise attention, SSD scan.  us_per_call is the real measure here;
 derived carries shape info."""
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import row
+from benchmarks.common import avg_us, row
 from repro.kernels import ops
 
 
 def _time(fn, *args, iters=20):
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+    return avg_us(fn, *args, iters=iters, name="kernel")
 
 
 def main():

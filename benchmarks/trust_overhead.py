@@ -27,12 +27,11 @@ path by definition.
 from __future__ import annotations
 
 import os
-import time
 
 import numpy as np
 
 from benchmarks.common import BATCH, ROUNDS, dataset, make_system, row, \
-    train_system
+    timed, train_system
 from repro.core.attacks import AttackConfig
 from repro.core.storage import serialize_tree
 from repro.trust.protocol import TrustConfig
@@ -119,13 +118,13 @@ def _scheduling_rows(kind: str, rounds: int):
     walls = {sched: 0.0 for sched in systems}
     for idx in batches:
         for sched, sys_ in systems.items():
-            t0 = time.perf_counter()
-            sys_.train_round(xtr[idx], ytr[idx])
-            walls[sched] += time.perf_counter() - t0
+            with timed(f"sched.{sched}") as t:
+                sys_.train_round(xtr[idx], ytr[idx])
+            walls[sched] += t.seconds
     for sched, sys_ in systems.items():
-        t0 = time.perf_counter()
-        sys_.flush_trust()
-        walls[sched] += time.perf_counter() - t0
+        with timed(f"sched.{sched}") as t:
+            sys_.flush_trust()
+        walls[sched] += t.seconds
     critical = {}
     for sched, sys_ in systems.items():
         audit_s = sys_._timers["audit"]          # 0 for synchronous

@@ -32,7 +32,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from typing import Dict, List, Optional
 
 import jax
@@ -44,6 +43,7 @@ from repro.core.attacks import AttackConfig, round_attack_mask, poison_tree
 from repro.core.consensus import ProofOfWork
 from repro.core.ledger import Ledger, digest_array, digest_bytes, digest_tree
 from repro.core.reputation import ReputationConfig, ReputationLedger, WorkloadBalancer
+from repro.obs import Observability
 from repro.storage import (ExpertCache, ExpertStore, GateEMA,
                            NetworkCostModel, StorageNetwork)
 from repro.kernels import ops as kops
@@ -113,8 +113,23 @@ class BMoEConfig:
 class BMoESystem:
     """One instantiation of Fig. 3. See module docstring."""
 
-    def __init__(self, cfg: BMoEConfig):
+    # phase-seconds metrics behind the legacy ``_timers`` keys: every
+    # wall-clock second the system books flows through a span into the
+    # obs registry, and the old dict is a read-only view of it
+    _TIMER_METRICS = {"compute": "bmoe.compute_s",
+                      "consensus": "bmoe.consensus_s",
+                      "chain": "bmoe.chain_s",
+                      "audit": "bmoe.audit_s",
+                      "audit_infer": "bmoe.audit_infer_s",
+                      "storage": "bmoe.storage_s"}
+
+    def __init__(self, cfg: BMoEConfig, obs: Optional[Observability] = None):
         self.cfg = cfg
+        # the one observability bundle of the run: every layer below
+        # (storage network/store/cache, trust protocols, DA auditor)
+        # records into its registry, and spans opened here mark the
+        # round phases on its tracer.  Default: tracing off, metrics on.
+        self.obs = obs if obs is not None else Observability()
         key = jax.random.PRNGKey(cfg.seed)
         kg, ke = jax.random.split(key)
         gate_in = cfg.in_dim if cfg.expert_kind == "mlp" else 32 * 32 * cfg.in_ch
@@ -129,15 +144,18 @@ class BMoESystem:
             num_nodes=cfg.num_storage_nodes,
             replication=cfg.storage_replication, seed=cfg.seed,
             cost=NetworkCostModel(
-                bandwidth_bytes_per_s=cfg.bandwidth_bytes_per_s))
+                bandwidth_bytes_per_s=cfg.bandwidth_bytes_per_s),
+            metrics=self.obs.metrics)
         # the storage layer proper: versioned per-expert chunk manifests
         # (version v = the bank state entering round v; only changed
         # experts re-upload, and unchanged chunks dedup away), plus the
         # edge-side cache the executor resolves activated experts through
         self.expert_store = ExpertStore(self.storage,
-                                        chunk_bytes=cfg.chunk_bytes)
+                                        chunk_bytes=cfg.chunk_bytes,
+                                        metrics=self.obs.metrics)
         self.edge_cache = (ExpertCache(self.expert_store,
-                                       cfg.edge_cache_bytes)
+                                       cfg.edge_cache_bytes,
+                                       metrics=self.obs.metrics)
                            if cfg.edge_cache == "on" else None)
         self.gate_ema = GateEMA(cfg.num_experts)
         self._expert_like = jax.tree_util.tree_map(
@@ -177,22 +195,22 @@ class BMoESystem:
         self._infer_ctx: Dict[int, Dict] = {}
         self._infer_audit_cids: Dict[int, List[str]] = {}
         self.infer_log: List[Dict] = []
-        # "audit" collects verifier recompute/hash/fetch seconds drained
-        # under pipelined scheduling: work that deployment runs on the
-        # verifier pool concurrently with later rounds, i.e. OFF the
-        # round loop's critical path (the simulation executes it inline,
-        # so it is measured separately rather than folded into
-        # consensus).  Synchronous scheduling keeps audits on the
-        # critical path, inside "consensus".
+        # "audit" (bmoe.audit_s) collects verifier recompute/hash/fetch
+        # seconds drained under pipelined scheduling: work that
+        # deployment runs on the verifier pool concurrently with later
+        # rounds, i.e. OFF the round loop's critical path — the drain
+        # span is opened ``off_path=True``, so every enclosing phase
+        # metric (consensus) natively excludes it.  Synchronous
+        # scheduling keeps audits on the critical path, inside
+        # "consensus".
         # "audit_infer" keeps the inference pipeline's drains out of the
         # per-training-round latency decomposition
         # "storage": expert-version publication + edge-cache bank
         # resolution seconds (host wall-clock; the *modeled* transfer
         # time lives in storage_report(), on the network cost model)
-        self._timers: Dict[str, float] = {"compute": 0.0, "consensus": 0.0,
-                                          "chain": 0.0, "audit": 0.0,
-                                          "audit_infer": 0.0,
-                                          "storage": 0.0}
+        for name in self._TIMER_METRICS.values():
+            self.obs.metrics.counter(name)
+        self.obs.metrics.counter("bmoe.round_s")
         # verification-compute ledger, in units of (expert evaluations x
         # samples): base = the one canonical execution, verify = recompute
         # done purely to check it (redundant copies / audits), escalate =
@@ -206,7 +224,9 @@ class BMoESystem:
         if cfg.framework == "optimistic":
             self.trust_cfg = cfg.trust or TrustConfig(seed=cfg.seed)
             self.protocol = OptimisticProtocol(self.trust_cfg, cfg.num_edges,
-                                               self.reputation)
+                                               self.reputation,
+                                               metrics=self.obs.metrics,
+                                               namespace="trust.train")
             if cfg.da_rate > 0:
                 # storage nodes post their own bonds: a replica that
                 # cannot produce a committed chunk inside the challenge
@@ -214,7 +234,8 @@ class BMoESystem:
                 self.da = DataAvailabilityAuditor(
                     self.storage, num_nodes=cfg.num_storage_nodes,
                     window=self.trust_cfg.challenge_window,
-                    sample_rate=cfg.da_rate, seed=cfg.seed)
+                    sample_rate=cfg.da_rate, seed=cfg.seed,
+                    metrics=self.obs.metrics)
             self._apply_one = (ex.mlp_expert_apply if cfg.expert_kind == "mlp"
                                else ex.cnn_expert_apply)
             # one grouped jitted call recomputes every sampled (expert,
@@ -253,93 +274,107 @@ class BMoESystem:
         executor = (self.protocol.pick_executor(self.round)
                     if cfg.framework == "optimistic" else 0)
         gate_bias, active = self._controls()
-        # Step 2 (storage -> edge): the executor edge resolves this
-        # round's bank through its cache — activated experts pinned and
-        # refreshed at the committed version, misses fetched chunk-by-
-        # chunk from the storage layer (bit-identical to the resident
-        # bank: pinned in tests/test_expert_cache.py)
-        t0 = time.perf_counter()
-        bank = self._resolve_bank(x, gate_bias)
-        self._timers["storage"] += time.perf_counter() - t0
-        prev = (self.gate, bank)
+        # the round span carries the on-path round seconds (off-path
+        # audit drains nested below are excluded natively); every phase
+        # below is its child, so one traced round decomposes into
+        # fetch -> dispatch -> [publish/consensus/chain] spans whose
+        # metric sums are exactly the legacy latency_report components
+        with self.obs.span("round", metric="bmoe.round_s",
+                           round=self.round, kind="train",
+                           framework=cfg.framework, executor=executor):
+            # Step 2 (storage -> edge): the executor edge resolves this
+            # round's bank through its cache — activated experts pinned
+            # and refreshed at the committed version, misses fetched
+            # chunk-by-chunk from the storage layer (bit-identical to the
+            # resident bank: pinned in tests/test_expert_cache.py)
+            with self.obs.span("fetch", metric="bmoe.storage_s",
+                               round=self.round):
+                bank = self._resolve_bank(x, gate_bias)
+            prev = (self.gate, bank)
 
-        t0 = time.perf_counter()
-        (self.gate, self.experts, metrics) = self._train_step(
-            self.gate, bank, x, y, mask_e,
-            jax.random.fold_in(rkey, 1), atk.noise_std,
-            jnp.asarray(atk.colluding), gate_bias, active,
-            jnp.int32(executor))
-        metrics = jax.tree_util.tree_map(np.asarray, metrics)
-        self._timers["compute"] += time.perf_counter() - t0
-        self.gate_ema.update(metrics["activation"])
+            with self.obs.span("dispatch", metric="bmoe.compute_s",
+                               round=self.round):
+                (self.gate, self.experts, metrics) = self._train_step(
+                    self.gate, bank, x, y, mask_e,
+                    jax.random.fold_in(rkey, 1), atk.noise_std,
+                    jnp.asarray(atk.colluding), gate_bias, active,
+                    jnp.int32(executor))
+                metrics = jax.tree_util.tree_map(np.asarray, metrics)
+            self.gate_ema.update(metrics["activation"])
 
-        batch = int(x.shape[0])
-        payload = {
-            "round": self.round, "kind": "train",
-            "task": digest_array(np.asarray(x)[:8]),
-            "loss": float(metrics["loss"]),
-        }
-        # cost ledger in expert-evaluation units (one unit = one expert
-        # evaluated on one row of what it actually computes: the full
-        # batch under dense dispatch, its capacity bucket under sparse —
-        # the optimistic commitment covers exactly that buffer), so
-        # base/verify/escalate are all measured with the same yardstick
-        self.verify_stats["rounds"] += 1
-        if cfg.framework == "traditional":
-            self.verify_stats["base_evals"] += cfg.top_k * batch  # routed
-        else:
-            self.verify_stats["base_evals"] += self._exec_evals(batch)
-        if cfg.framework != "optimistic":
-            # Step 5, chunked: publish the updated experts as new
-            # manifest versions (only routed experts changed; unchanged
-            # chunks dedup away).  The optimistic path publishes after
-            # its commit/audit bookkeeping instead — round r's audits
-            # must be able to retain the version-r manifests first.
-            t0 = time.perf_counter()
-            self._publish_bank(metrics["activation"], self.round + 1)
-            self._timers["storage"] += time.perf_counter() - t0
-            payload["bank_root"] = self._bank_root()[:16]
-        if cfg.framework == "bmoe":
-            # the redundancy mechanism IS the verification: M-1 extra
-            # copies of the same execution
-            self.verify_stats["verify_evals"] += \
-                (cfg.num_edges - 1) * self._exec_evals(batch)
-            # Step 4-5: edges vote on the updated experts' hashes; the
-            # accepted bank's storage root is already in the payload.
-            t0 = time.perf_counter()
-            payload["trusted_supports"] = metrics["support"].tolist()
-            self._expert_hash_vote(atk, rkey, payload)
-            self._timers["consensus"] += time.perf_counter() - t0
-            # Step 6: block generation under PoW.
-            t0 = time.perf_counter()
-            self._mine(payload)
-            self._timers["chain"] += time.perf_counter() - t0
-        elif cfg.framework == "optimistic":
-            # commit -> optimistic accept -> async audit -> maybe rollback
-            # (audit seconds drained off-path land in _timers["audit"],
-            # not in the critical-path consensus time)
-            t0 = time.perf_counter()
-            a0 = self._timers["audit"]
-            metrics = self._optimistic_round(
-                x, y, atk, mask_e, rkey, executor, prev, metrics, payload,
-                gate_bias, active)
-            self._timers["consensus"] += (time.perf_counter() - t0
-                                          - (self._timers["audit"] - a0))
-            payload["loss"] = float(metrics["loss"])
-            t0 = time.perf_counter()
-            if not payload.get("rolled_back"):
-                # a rolled-back round's honest replay already republished
-                # the voided versions (including this round's successor)
-                self._publish_bank(metrics["activation"], self.round + 1)
-            self._timers["storage"] += time.perf_counter() - t0
-            payload["bank_root"] = self._bank_root()[:16]
-            t0 = time.perf_counter()
-            self._mine(payload)
-            self._timers["chain"] += time.perf_counter() - t0
-        self._update_controllers(metrics)
-        self.activation_counts += metrics["activation"]
-        self.activation_total += batch * cfg.top_k
-        self.round += 1
+            batch = int(x.shape[0])
+            payload = {
+                "round": self.round, "kind": "train",
+                "task": digest_array(np.asarray(x)[:8]),
+                "loss": float(metrics["loss"]),
+            }
+            # cost ledger in expert-evaluation units (one unit = one
+            # expert evaluated on one row of what it actually computes:
+            # the full batch under dense dispatch, its capacity bucket
+            # under sparse — the optimistic commitment covers exactly
+            # that buffer), so base/verify/escalate are all measured
+            # with the same yardstick
+            self.verify_stats["rounds"] += 1
+            if cfg.framework == "traditional":
+                self.verify_stats["base_evals"] += cfg.top_k * batch
+            else:
+                self.verify_stats["base_evals"] += self._exec_evals(batch)
+            if cfg.framework != "optimistic":
+                # Step 5, chunked: publish the updated experts as new
+                # manifest versions (only routed experts changed;
+                # unchanged chunks dedup away).  The optimistic path
+                # publishes after its commit/audit bookkeeping instead —
+                # round r's audits must be able to retain the version-r
+                # manifests first.
+                with self.obs.span("publish", metric="bmoe.storage_s",
+                                   round=self.round):
+                    self._publish_bank(metrics["activation"],
+                                       self.round + 1)
+                payload["bank_root"] = self._bank_root()[:16]
+            if cfg.framework == "bmoe":
+                # the redundancy mechanism IS the verification: M-1 extra
+                # copies of the same execution
+                self.verify_stats["verify_evals"] += \
+                    (cfg.num_edges - 1) * self._exec_evals(batch)
+                # Step 4-5: edges vote on the updated experts' hashes;
+                # the accepted bank's storage root is in the payload.
+                with self.obs.span("consensus", metric="bmoe.consensus_s",
+                                   round=self.round):
+                    payload["trusted_supports"] = \
+                        metrics["support"].tolist()
+                    self._expert_hash_vote(atk, rkey, payload)
+                # Step 6: block generation under PoW.
+                with self.obs.span("chain", metric="bmoe.chain_s",
+                                   round=self.round):
+                    self._mine(payload)
+            elif cfg.framework == "optimistic":
+                # commit -> optimistic accept -> async audit -> maybe
+                # rollback.  The pipelined audit drain inside opens an
+                # off_path span, so its seconds land in bmoe.audit_s and
+                # are excluded from this consensus span's metric — the
+                # span algebra that replaced the old hand subtraction.
+                with self.obs.span("consensus", metric="bmoe.consensus_s",
+                                   round=self.round):
+                    metrics = self._optimistic_round(
+                        x, y, atk, mask_e, rkey, executor, prev, metrics,
+                        payload, gate_bias, active)
+                payload["loss"] = float(metrics["loss"])
+                with self.obs.span("publish", metric="bmoe.storage_s",
+                                   round=self.round):
+                    if not payload.get("rolled_back"):
+                        # a rolled-back round's honest replay already
+                        # republished the voided versions (including
+                        # this round's successor)
+                        self._publish_bank(metrics["activation"],
+                                           self.round + 1)
+                payload["bank_root"] = self._bank_root()[:16]
+                with self.obs.span("chain", metric="bmoe.chain_s",
+                                   round=self.round):
+                    self._mine(payload)
+            self._update_controllers(metrics)
+            self.activation_counts += metrics["activation"]
+            self.activation_total += batch * cfg.top_k
+            self.round += 1
         return metrics
 
     def infer(self, x, *, attack: Optional[AttackConfig] = None,
@@ -395,23 +430,33 @@ class BMoESystem:
         rkey = jax.random.fold_in(rkey, rid)
         mask_e = round_attack_mask(atk, cfg.num_edges, rkey)
         executor = proto.pick_executor(rid)
-        bank = self._resolve_bank(x, gate_bias)
-        version = self._bank_version
-        logits, activation, support = self._infer_step(
-            self.gate, bank, x, mask_e, jax.random.fold_in(rkey, 1),
-            atk.noise_std, jnp.asarray(atk.colluding), gate_bias, active,
-            jnp.int32(executor))
-        self.gate_ema.update(np.asarray(activation))
-        xin = np.asarray(x if cfg.expert_kind == "cnn"
-                         else np.asarray(x).reshape(len(x), -1))
-        row_index, bounds = self._commitment_layout(self.gate, x,
-                                                    xin.shape[0], gate_bias)
-        tc = self.trust_cfg
-        honest = self._eager_outputs(bank, xin, bounds, row_index)
-        attacked = bool(np.asarray(mask_e)[executor] > 0)
-        state = self._commit_round(proto, rid, executor, honest, attacked,
-                                   atk, 1_000_000 + rid,
-                                   digest_array(xin[:8]), row_index)
+        # trace-only spans (no phase metric: the legacy decomposition
+        # never booked inference wall-clock outside the audit drains) —
+        # a traced run still sees the full fetch/dispatch/commit shape
+        with self.obs.span("infer-round", round=rid, kind="infer",
+                           executor=executor):
+            with self.obs.span("fetch", round=rid):
+                bank = self._resolve_bank(x, gate_bias)
+            version = self._bank_version
+            with self.obs.span("dispatch", round=rid):
+                logits, activation, support = self._infer_step(
+                    self.gate, bank, x, mask_e, jax.random.fold_in(rkey, 1),
+                    atk.noise_std, jnp.asarray(atk.colluding), gate_bias,
+                    active, jnp.int32(executor))
+            self.gate_ema.update(np.asarray(activation))
+            xin = np.asarray(x if cfg.expert_kind == "cnn"
+                             else np.asarray(x).reshape(len(x), -1))
+            row_index, bounds = self._commitment_layout(
+                self.gate, x, xin.shape[0], gate_bias)
+            tc = self.trust_cfg
+            with self.obs.span("commit", round=rid,
+                               executor=executor) as csp:
+                honest = self._eager_outputs(bank, xin, bounds, row_index)
+                attacked = bool(np.asarray(mask_e)[executor] > 0)
+                state = self._commit_round(proto, rid, executor, honest,
+                                           attacked, atk, 1_000_000 + rid,
+                                           digest_array(xin[:8]), row_index)
+                csp.set(root=state.commitment.root[:16])
         # data-availability contract: the versions this inference round
         # committed against stay retained until its window closes
         manifests = self._retain_round_manifests(version)
@@ -507,6 +552,15 @@ class BMoESystem:
         # binds the accepted bank's per-expert manifest roots on-chain.
 
     def _mine(self, payload):
+        tr = self.obs.trace
+        if tr.enabled:
+            # block -> trace correlation (see trust/README.md): every
+            # block mined while tracing names the trace and the innermost
+            # open span it was mined under.  Only when tracing — a
+            # disabled run's payloads (and so its block hashes) stay
+            # bit-identical to the pre-obs chain.
+            payload["trace_id"] = tr.trace_id
+            payload["span_id"] = tr.current_span_id()
         block = self.pow.mine(len(self.ledger.blocks), self.ledger.head.hash,
                               payload)
         self.ledger.append(block)
@@ -661,13 +715,9 @@ class BMoESystem:
         (with *modeled* transfer seconds on the deterministic cost
         model), chunk-dedup upload savings, edge-cache hit/miss/byte
         counters, DA challenge stats, and the host wall-clock spent on
-        storage bookkeeping."""
-        return {"network": dict(self.storage.stats),
-                "store": dict(self.expert_store.stats),
-                "cache": (dict(self.edge_cache.stats)
-                          if self.edge_cache else None),
-                "da": dict(self.da.stats) if self.da else None,
-                "wall_s": self._timers["storage"]}
+        storage bookkeeping.  A thin view over ``obs_report()`` — every
+        number is a live registry metric; keys unchanged from pre-obs."""
+        return self.obs_report()["storage"]
 
     # ------------------------------------------- optimistic verification
     def _sparse_routing(self, gate, x, gate_bias):
@@ -935,31 +985,42 @@ class BMoESystem:
                          "replayed_metrics": None}
         if not jobs:
             return summary
-        t0 = time.perf_counter()
-        if tc.audit_backend == "batched":
-            reports_by_rid = self._audit_jobs_merged(protocol, ctx_store,
-                                                     jobs)
-        else:
-            reports_by_rid = {
-                j.round_id: protocol.verifiers.audit(
-                    protocol.rounds[j.round_id].commitment, j.recompute_fn)
-                for j in jobs}
-        for job in jobs:
-            reports = reports_by_rid[job.round_id]
-            protocol.apply_reports(job.round_id, reports, job.recompute_fn)
-            audited = sum(r.recomputed_leaves for r in reports)
-            com = protocol.rounds[job.round_id].commitment
-            summary["audited_leaves"] += audited
-            # rows_per_expert is the capacity bucket under sparse
-            # dispatch: audit recompute shrinks with execution compute
-            self.verify_stats["verify_evals"] += \
-                audited * com.rows_per_expert / max(com.chunks_per_expert, 1)
-        if tc.scheduling == "pipelined":
-            # verifier-pool work: concurrent with later rounds in
-            # deployment, so off the critical path (courts + chain
-            # replay below stay on it — state must be settled)
-            key = "audit" if domain == "train" else "audit_infer"
-            self._timers[key] += time.perf_counter() - t0
+        # verifier-pool work: concurrent with later rounds in deployment,
+        # so off the critical path under pipelined scheduling — the
+        # off_path span's seconds land in its own audit metric and are
+        # natively excluded from every enclosing phase metric (the
+        # consensus span of the committing round).  Courts + chain
+        # replay below stay on the critical path — state must be
+        # settled.  Synchronous scheduling keeps the drain on-path (no
+        # metric: its time belongs to consensus, as before).
+        off = tc.scheduling == "pipelined"
+        metric = (("bmoe.audit_s" if domain == "train"
+                   else "bmoe.audit_infer_s") if off else None)
+        with self.obs.span("audit-drain", metric=metric, off_path=off,
+                           domain=domain,
+                           drained=[j.round_id for j in jobs]):
+            if tc.audit_backend == "batched":
+                reports_by_rid = self._audit_jobs_merged(protocol,
+                                                         ctx_store, jobs)
+            else:
+                reports_by_rid = {
+                    j.round_id: protocol.verifiers.audit(
+                        protocol.rounds[j.round_id].commitment,
+                        j.recompute_fn)
+                    for j in jobs}
+            for job in jobs:
+                reports = reports_by_rid[job.round_id]
+                protocol.apply_reports(job.round_id, reports,
+                                       job.recompute_fn)
+                audited = sum(r.recomputed_leaves for r in reports)
+                com = protocol.rounds[job.round_id].commitment
+                summary["audited_leaves"] += audited
+                # rows_per_expert is the capacity bucket under sparse
+                # dispatch: audit recompute shrinks with execution
+                # compute
+                self.verify_stats["verify_evals"] += \
+                    audited * com.rows_per_expert \
+                    / max(com.chunks_per_expert, 1)
 
         # courts fire in round order, so an early conviction invalidates
         # ACCEPTED descendants before their (clean) audits can finalize
@@ -977,10 +1038,15 @@ class BMoESystem:
             if state.phase is not RoundPhase.CHALLENGED:
                 continue
             ctx = ctx_store[rid]
-            pub = self._court_publish(ctx, state.commitment.claimed, rid)
-            verdict = protocol.court.escalate(
-                rid, pub, state.executor, active=np.asarray(ctx["active"]))
-            state = protocol.resolve(rid, verdict)
+            with self.obs.span("court", domain=domain, round=rid,
+                               executor=state.executor) as csp:
+                pub = self._court_publish(ctx, state.commitment.claimed,
+                                          rid)
+                verdict = protocol.court.escalate(
+                    rid, pub, state.executor,
+                    active=np.asarray(ctx["active"]))
+                state = protocol.resolve(rid, verdict)
+                csp.set(verdict=state.phase.value)
             summary["fraud_proofs"] += len(state.proofs)
             self.verify_stats["escalate_evals"] += \
                 cfg.num_edges * cfg.num_experts \
@@ -993,8 +1059,10 @@ class BMoESystem:
         summary["slashed"] = sorted(
             {ev.edge for ev in protocol.stakes.events[n_events:]})
         if summary["convicted"] and domain == "train":
-            summary["replayed_metrics"] = self._replay_chain(
-                min(summary["convicted"]))
+            with self.obs.span("rollback-replay",
+                               convicted=summary["convicted"]):
+                summary["replayed_metrics"] = self._replay_chain(
+                    min(summary["convicted"]))
         for rec in protocol.rollbacks[n_rollbacks:]:
             self._mine({"kind": "rollback", "domain": domain,
                         "rollback_of": rec.round_id,
@@ -1175,7 +1243,8 @@ class BMoESystem:
             self._infer_protocol = OptimisticProtocol(
                 self.trust_cfg, self.cfg.num_edges, self.reputation,
                 stakes=self.protocol.stakes, court=self.protocol.court,
-                chained=False)
+                chained=False, metrics=self.obs.metrics,
+                namespace="trust.infer")
         return self._infer_protocol
 
     def _record_infer_verdicts(self, summary: Dict) -> None:
@@ -1190,11 +1259,55 @@ class BMoESystem:
         return ([] if self._infer_protocol is None
                 else self._infer_protocol.pending())
 
+    # ------------------------------------------------- unified reporting
+    @property
+    def _timers(self) -> Dict[str, float]:
+        """The legacy phase-timer dict, as a read-only view over the obs
+        registry (same keys and values as the pre-obs ad-hoc dict).
+        Writes happen only through spans — one measurement substrate."""
+        m = self.obs.metrics
+        return {k: float(m.value(n))
+                for k, n in self._TIMER_METRICS.items()}
+
+    def obs_report(self, expert_bytes: Optional[int] = None,
+                   result_bytes: Optional[int] = None,
+                   rounds: Optional[int] = None) -> Dict:
+        """The unified observability entry point: one dict with every
+        layer's numbers, all read from the single metrics registry.
+
+        Sections: ``metrics`` (the flat registry snapshot),
+        ``timers`` (legacy phase-seconds keys), ``storage`` (the exact
+        ``storage_report()`` shape), ``verification`` (the exact
+        ``verification_report()`` shape), and — when the byte/round
+        arguments are given — ``latency`` (the exact ``latency_report()``
+        shape).  The legacy report methods are thin views over this."""
+        out: Dict = {
+            "metrics": self.obs.metrics.snapshot(),
+            "timers": dict(self._timers),
+            "storage": {"network": dict(self.storage.stats),
+                        "store": dict(self.expert_store.stats),
+                        "cache": (dict(self.edge_cache.stats)
+                                  if self.edge_cache else None),
+                        "da": dict(self.da.stats) if self.da else None,
+                        "wall_s": self._timers["storage"]},
+            "verification": self.verification_report(),
+        }
+        if rounds is not None:
+            out["latency"] = self._latency_section(
+                expert_bytes or 0, result_bytes or 0, rounds)
+        return out
+
     # ----------------------------------------------------- latency model
     def latency_report(self, expert_bytes: int, result_bytes: int,
                        rounds: int) -> Dict[str, float]:
         """Per-round latency decomposition (paper Fig. 4b is relative):
-        measured compute/consensus/chain wall-clock + modeled comms."""
+        measured compute/consensus/chain wall-clock + modeled comms.
+        A thin view over ``obs_report()`` — keys unchanged from pre-obs."""
+        return self.obs_report(expert_bytes, result_bytes,
+                               rounds)["latency"]
+
+    def _latency_section(self, expert_bytes: int, result_bytes: int,
+                         rounds: int) -> Dict[str, float]:
         cfg = self.cfg
         bw = cfg.bandwidth_bytes_per_s
         if cfg.framework == "bmoe":
@@ -1214,24 +1327,25 @@ class BMoESystem:
         else:
             t_comm = cfg.top_k * result_bytes / bw
         r = max(rounds, 1)
+        timers = self._timers
         return {
-            "compute_s": self._timers["compute"] / r,
+            "compute_s": timers["compute"] / r,
             "comm_s": t_comm,
-            "consensus_s": self._timers["consensus"] / r,
-            "chain_s": self._timers["chain"] / r,
+            "consensus_s": timers["consensus"] / r,
+            "chain_s": timers["chain"] / r,
             # verifier-pool audit seconds drained off the critical path
             # (pipelined scheduling only; synchronous audits sit inside
             # consensus_s) — reported separately, excluded from total_s
-            "audit_offpath_s": self._timers["audit"] / r,
+            "audit_offpath_s": timers["audit"] / r,
             # host wall-clock of the storage simulation (chunk hashing,
             # cache resolution) — reported separately, excluded from
             # total_s: the *transfer* time it simulates is already the
             # modeled comm_s term (see storage_report() for the cost-
             # model view)
-            "storage_s": self._timers["storage"] / r,
-            "total_s": self._timers["compute"] / r + t_comm
-                       + self._timers["consensus"] / r
-                       + self._timers["chain"] / r,
+            "storage_s": timers["storage"] / r,
+            "total_s": timers["compute"] / r + t_comm
+                       + timers["consensus"] / r
+                       + timers["chain"] / r,
         }
 
     def verification_report(self) -> Dict[str, float]:

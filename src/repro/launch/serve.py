@@ -6,7 +6,6 @@ greedy decode) over synthetic requests and reports throughput.
 from __future__ import annotations
 
 import argparse
-import time
 
 from repro.configs import ARCH_IDS, get_config
 from repro.data.synthetic import serving_requests
@@ -34,9 +33,8 @@ def main():
                                  max_prompt=args.max_prompt,
                                  max_new=args.max_new, seed=0))
     engine.submit(reqs)
-    t0 = time.perf_counter()
     done = engine.run()
-    dt = time.perf_counter() - t0
+    dt = engine.report()["tick_s"]     # wall seconds from the registry
     total_tokens = sum(len(v) for v in done.values())
     print(f"[serve] arch={cfg.name} completed {len(done)}/{len(reqs)} "
           f"requests, {total_tokens} tokens in {dt:.1f}s "

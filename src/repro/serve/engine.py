@@ -33,6 +33,8 @@ import numpy as np
 from repro.models import transformer as tfm
 from repro.models.builder import materialize
 from repro.models.config import ModelConfig
+from repro.obs import Observability
+from repro.obs.metrics import MetricsRegistry
 from repro.storage import (ExpertCache, ExpertStore, GateEMA,
                            StorageNetwork)
 from repro.train.step import make_decode_step
@@ -88,14 +90,18 @@ class _EdgeExpertRuntime:
     ``transformer.forward_decode(expert_stats=True)``: scanned blocks
     block-major, then the remainder)."""
 
-    def __init__(self, cfg: ModelConfig, params, scfg: EdgeStorageConfig):
+    def __init__(self, cfg: ModelConfig, params, scfg: EdgeStorageConfig,
+                 metrics: Optional[MetricsRegistry] = None):
         self.cfg = cfg
         self.scfg = scfg
         self.network = StorageNetwork(num_nodes=scfg.num_nodes,
                                       replication=scfg.replication,
-                                      seed=scfg.seed)
-        self.store = ExpertStore(self.network, chunk_bytes=scfg.chunk_bytes)
-        self.cache = ExpertCache(self.store, scfg.cache_bytes)
+                                      seed=scfg.seed, metrics=metrics,
+                                      namespace="edge.network")
+        self.store = ExpertStore(self.network, chunk_bytes=scfg.chunk_bytes,
+                                 metrics=metrics, namespace="edge.store")
+        self.cache = ExpertCache(self.store, scfg.cache_bytes,
+                                 metrics=metrics, namespace="edge.cache")
         self._like: List[Dict] = []           # per layer: one unit template
         self._n_real = cfg.num_experts
         self._register(params)
@@ -160,6 +166,8 @@ class _EdgeExpertRuntime:
         self.ticks += 1
 
     def report(self) -> Dict:
+        # same keys as pre-obs; with a registry the stats dicts are live
+        # views over the edge.{cache,store,network}.* metrics
         return {"cache": dict(self.cache.stats),
                 "store": dict(self.store.stats),
                 "network": dict(self.network.stats),
@@ -216,11 +224,13 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
                  cache_len: int = 256, mesh=None,
                  trust: Optional[TrustConfig] = None,
-                 expert_storage: Optional[EdgeStorageConfig] = None):
+                 expert_storage: Optional[EdgeStorageConfig] = None,
+                 obs: Optional[Observability] = None):
         if cfg.is_encoder_decoder:
             raise NotImplementedError("engine drives decoder-only archs")
         self.cfg = cfg
         self.params = params
+        self.obs = obs if obs is not None else Observability()
         self.batch = batch_slots
         self.cache_len = cache_len
         self.caches = materialize(
@@ -236,12 +246,14 @@ class ServingEngine:
                           + list(cfg.remainder))
             if not has_moe:
                 raise ValueError("expert_storage needs a MoE model")
-            self.edge = _EdgeExpertRuntime(cfg, params, expert_storage)
+            self.edge = _EdgeExpertRuntime(cfg, params, expert_storage,
+                                           metrics=self.obs.metrics)
         self._decode = jax.jit(make_decode_step(
             cfg, mesh, expert_stats=self.edge is not None))
         self.slots = [SlotState() for _ in range(batch_slots)]
         self.queue: deque = deque()
         self.tick = 0
+        self._tick_lat_s = 0.0          # decode latency of the last tick
         self._submit_order: List[int] = []
         self._done: Dict[int, List[int]] = {}
         # ---- verified-session state (optimistic trust layer)
@@ -258,7 +270,8 @@ class ServingEngine:
             trust.audit_rate / max(trust.num_verifiers, 1),
             trust.lazy_verifier_prob, trust.seed,
             stakes=trust.verifier_stakes, reaudit_rate=trust.reaudit_rate,
-            verifier_slash_fraction=trust.verifier_slash_fraction)
+            verifier_slash_fraction=trust.verifier_slash_fraction,
+            metrics=self.obs.metrics, namespace="serve.verifiers")
             if trust is not None else None)
         self._finalized: set = set()
         # deadline-ordered auto-audit queue: a sealed session's audit is
@@ -324,6 +337,11 @@ class ServingEngine:
 
     def _emit(self, slot: SlotState, token: int) -> None:
         slot.generated.append(token)
+        m = self.obs.metrics
+        m.counter("serve.tokens").add(1)
+        m.histogram("serve.token_latency_s").observe(self._tick_lat_s)
+        m.histogram("serve.token_latency_s",
+                    session=slot.request_id).observe(self._tick_lat_s)
         if self.verified:
             self.records[slot.request_id].append(self.tick, token)
 
@@ -357,12 +375,17 @@ class ServingEngine:
         path instead of blocking every tick."""
         if not self._audit_queue or self._audit_queue[0][0] > self.tick:
             return
-        while self._audit_queue:
-            _, rid = heapq.heappop(self._audit_queue)
-            rec = self.records[rid]
-            if rec.revoked or not rec.root:
-                continue
-            self._audit_full(rid)
+        # burst drains off the critical path: booked to serve.audit_s and
+        # excluded from the enclosing tick span's serve.tick_s
+        drained = [rid for _, rid in self._audit_queue]
+        with self.obs.span("audit-drain", metric="serve.audit_s",
+                           off_path=True, tick=self.tick, drained=drained):
+            while self._audit_queue:
+                _, rid = heapq.heappop(self._audit_queue)
+                rec = self.records[rid]
+                if rec.revoked or not rec.root:
+                    continue
+                self._audit_full(rid)
 
     @staticmethod
     def _overlaps(a: SessionRecord, b: SessionRecord) -> bool:
@@ -408,6 +431,10 @@ class ServingEngine:
         tick; a per-slot position mask keeps semantics correct.)  In
         verified mode, ticks keep running after the queue drains until
         every challenge window has closed."""
+        with self.obs.span("tick", metric="serve.tick_s", tick=self.tick):
+            return self._step_inner()
+
+    def _step_inner(self):
         self._fill_slots()
         if not any(s.active for s in self.slots):
             if self.verified and len(self._window):
@@ -425,15 +452,20 @@ class ServingEngine:
                 tokens[i, 0] = s.generated[-1]
         pos = max((s.pos for s in self.slots if s.active), default=0)
         batch = {"tokens": jnp.asarray(tokens), "pos": jnp.int32(pos)}
-        if self.edge is not None:
-            nxt, self.caches, stats = self._decode(self.params, self.caches,
-                                                   batch)
-            # resolve THIS tick's activated experts through the edge
-            # cache (cold: chunk fetches; warm: hits) + EMA prefetch
-            self.edge.on_tick(np.asarray(stats))
-        else:
-            nxt, self.caches = self._decode(self.params, self.caches, batch)
-        nxt = np.asarray(nxt)
+        with self.obs.span("decode", metric="serve.decode_s",
+                           tick=self.tick) as dsp:
+            if self.edge is not None:
+                nxt, self.caches, stats = self._decode(self.params,
+                                                       self.caches, batch)
+                # resolve THIS tick's activated experts through the edge
+                # cache (cold: chunk fetches; warm: hits) + EMA prefetch
+                self.edge.on_tick(np.asarray(stats))
+            else:
+                nxt, self.caches = self._decode(self.params, self.caches,
+                                                batch)
+            nxt = np.asarray(nxt)
+        # every token emitted this tick shares the tick's decode latency
+        self._tick_lat_s = dsp.dur_s
         self.tick += 1
         for i, s in enumerate(self.slots):
             if not s.active:
@@ -458,6 +490,31 @@ class ServingEngine:
         while self.step() and ticks < max_ticks:
             ticks += 1
         return self.completed
+
+    def obs_report(self) -> Dict:
+        """Serving-side view over the metrics registry: tick/token
+        throughput, wall-clock totals, token-latency percentiles
+        (aggregate and per session), plus the edge storage section when
+        edge expert storage is on."""
+        m = self.obs.metrics
+        out = {
+            "ticks": self.tick,
+            "tokens": int(m.value("serve.tokens")),
+            "tick_s": float(m.value("serve.tick_s")),
+            "decode_s": float(m.value("serve.decode_s")),
+            "audit_offpath_s": float(m.value("serve.audit_s")),
+            "token_latency": m.histogram("serve.token_latency_s").snapshot(),
+            "sessions": {
+                name.split("session=", 1)[1].rstrip("}"): snap
+                for name, snap in
+                m.snapshot("serve.token_latency_s{").items()},
+        }
+        if self.edge is not None:
+            out["edge"] = self.edge.report()
+        return out
+
+    def report(self) -> Dict:
+        return self.obs_report()
 
     # ------------------------------------------------ audits (verified)
     def audit_session(self, request_id: int, verifier: int = 0) -> Dict:

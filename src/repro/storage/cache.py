@@ -23,6 +23,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs.metrics import CounterGroup, MetricsRegistry
 from repro.storage.store import ExpertStore
 
 
@@ -52,14 +53,18 @@ class GateEMA:
 
 class ExpertCache:
     def __init__(self, store: ExpertStore,
-                 budget_bytes: Optional[int] = None):
+                 budget_bytes: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 namespace: str = "storage.cache"):
         self.store = store
         self.budget_bytes = budget_bytes        # None: unbounded
         self._entries: "OrderedDict[str, Dict]" = OrderedDict()
         self._pinned: set = set()
-        self.stats = {"hits": 0, "misses": 0, "evictions": 0,
-                      "fetched_bytes": 0, "evicted_bytes": 0,
-                      "prefetches": 0, "bypasses": 0}
+        self.stats = CounterGroup(
+            {"hits": 0, "misses": 0, "evictions": 0,
+             "fetched_bytes": 0, "evicted_bytes": 0,
+             "prefetches": 0, "bypasses": 0},
+            metrics, namespace)
 
     # -------------------------------------------------------- residency
     @property

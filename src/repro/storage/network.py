@@ -25,6 +25,7 @@ import random
 from typing import Dict, List, Optional
 
 from repro.core.ledger import digest_bytes
+from repro.obs.metrics import CounterGroup, MetricsRegistry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,7 +71,9 @@ class StorageNetwork:
     """A set of storage nodes with replication. ``put`` returns the CID."""
 
     def __init__(self, num_nodes: int = 4, replication: int = 2,
-                 seed: int = 0, cost: Optional[NetworkCostModel] = None):
+                 seed: int = 0, cost: Optional[NetworkCostModel] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 namespace: str = "storage.network"):
         self.nodes: List[StorageNode] = [StorageNode(i) for i in range(num_nodes)]
         self.replication = min(replication, num_nodes)
         # placement and read-scan orders draw from SEPARATE seeded
@@ -84,9 +87,14 @@ class StorageNetwork:
         # CIDs a read observed a bad replica of: a later re-offer of the
         # verified bytes heals those copies (see put)
         self._suspect: set = set()
-        self.stats = {"put_requests": 0, "put_bytes": 0, "dedup_puts": 0,
-                      "healed_puts": 0, "get_requests": 0, "get_bytes": 0,
-                      "modeled_put_s": 0.0, "modeled_get_s": 0.0}
+        # transfer ledger: plain-dict interface, but with a registry
+        # every entry is the live metric {namespace}.{key} (the obs
+        # layer's view and this dict are the same numbers)
+        self.stats = CounterGroup(
+            {"put_requests": 0, "put_bytes": 0, "dedup_puts": 0,
+             "healed_puts": 0, "get_requests": 0, "get_bytes": 0,
+             "modeled_put_s": 0.0, "modeled_get_s": 0.0},
+            metrics, namespace)
 
     # ------------------------------------------------------------ write
     def put(self, data: bytes) -> str:

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.obs.metrics import CounterGroup, MetricsRegistry
 from repro.storage.chunks import (DEFAULT_CHUNK_BYTES, ChunkManifest,
                                   assemble_tree, build_manifest)
 from repro.storage.network import StorageNetwork
@@ -50,7 +51,9 @@ class ChunkUnavailableError(KeyError):
 
 class ExpertStore:
     def __init__(self, network: StorageNetwork,
-                 chunk_bytes: int = DEFAULT_CHUNK_BYTES):
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 metrics: Optional[MetricsRegistry] = None,
+                 namespace: str = "storage.store"):
         self.network = network
         self.chunk_bytes = int(chunk_bytes)
         # object_id -> [(version, manifest_cid)], version-ascending
@@ -58,10 +61,12 @@ class ExpertStore:
         self._manifests: Dict[str, ChunkManifest] = {}    # by manifest cid
         self._refs: Dict[str, int] = {}                   # host retention
         self._chunk_refs: Dict[str, int] = {}             # live manifests
-        self.stats = {"versions": 0, "noop_versions": 0,
-                      "chunks_uploaded": 0, "chunks_deduped": 0,
-                      "uploaded_bytes": 0, "dedup_bytes": 0,
-                      "fetched_bytes": 0, "fetches": 0}
+        self.stats = CounterGroup(
+            {"versions": 0, "noop_versions": 0,
+             "chunks_uploaded": 0, "chunks_deduped": 0,
+             "uploaded_bytes": 0, "dedup_bytes": 0,
+             "fetched_bytes": 0, "fetches": 0},
+            metrics, namespace)
 
     # ------------------------------------------------------------ write
     def put_version(self, object_id: str, tree: Any,

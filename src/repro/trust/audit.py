@@ -36,6 +36,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.ledger import digest_bytes
+from repro.obs.metrics import CounterGroup, MetricsRegistry
 from repro.trust.commitments import (MerklePath, MerkleTree, RoundCommitment,
                                      leaf_digest, leaf_digest_batch)
 
@@ -243,7 +244,9 @@ class VerifierPool:
                  lazy_prob: float = 0.0, seed: int = 0,
                  stakes: Optional[Sequence[float]] = None,
                  reaudit_rate: float = 0.0,
-                 verifier_slash_fraction: float = 0.5):
+                 verifier_slash_fraction: float = 0.5,
+                 metrics: Optional[MetricsRegistry] = None,
+                 namespace: str = "trust.verifiers"):
         self.num_verifiers = num_verifiers
         self.audit_rate = float(audit_rate)
         self.lazy_prob = float(lazy_prob)
@@ -264,6 +267,21 @@ class VerifierPool:
         self.reaudit_rate = float(reaudit_rate)
         self.verifier_slash_fraction = float(verifier_slash_fraction)
         self.lazy_slashes: List[LazySlashEvent] = []
+        # one ledger for every audit path (eager, batched, cross-round
+        # burst): the pool's workload as the obs layer sees it
+        self.stats = CounterGroup(
+            {"audit_passes": 0, "lazy_passes": 0, "sampled_leaves": 0,
+             "recomputed_leaves": 0, "fraud_proofs": 0,
+             "reaudit_slashes": 0},
+            metrics, namespace)
+
+    def _count_report(self, report: "AuditReport") -> None:
+        self.stats["audit_passes"] += 1
+        self.stats["sampled_leaves"] += len(report.sampled_leaves)
+        self.stats["recomputed_leaves"] += report.recomputed_leaves
+        self.stats["fraud_proofs"] += len(report.fraud_proofs)
+        if report.lazy:
+            self.stats["lazy_passes"] += 1
 
     def _rng(self, round_id: int, verifier: int,
              salt: int = 0) -> np.random.Generator:
@@ -314,6 +332,7 @@ class VerifierPool:
             if self.reaudit_rate > 0:
                 report.attestations = {
                     leaf: commitment.leaf_digests[leaf] for leaf in sampled}
+            self._count_report(report)
             return report
         tree = commitment.tree()
         for leaf in sampled:
@@ -332,6 +351,7 @@ class VerifierPool:
                     claimed_chunk=commitment.leaf_chunk(leaf),
                     path=tree.prove(leaf), claimed_digest=claimed,
                     recomputed_digest=honest, verifier=verifier))
+        self._count_report(report)
         return report
 
     def audit(self, commitment: RoundCommitment,
@@ -433,6 +453,8 @@ class VerifierPool:
                         expert=e, claimed_chunk=commitment.leaf_chunk(leaf),
                         path=tree.prove(leaf), claimed_digest=claimed,
                         recomputed_digest=honest, verifier=v))
+        for report in reports:
+            self._count_report(report)
         return reports
 
     def audit_rounds(self, commitments: Sequence[RoundCommitment],
@@ -522,6 +544,7 @@ class VerifierPool:
                         round_id=commitment.round_id,
                         verifier=report.verifier, leaf_index=leaf,
                         amount=amount))
+                    self.stats["reaudit_slashes"] += 1
                     caught.append(report.verifier)
                     break                  # one slash per (round, verifier)
         return caught

@@ -35,6 +35,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.ledger import digest_bytes
+from repro.obs.metrics import CounterGroup, MetricsRegistry
 from repro.storage.chunks import ChunkManifest
 from repro.storage.network import StorageNetwork
 from repro.trust.slashing import StakeBook
@@ -75,7 +76,9 @@ class DataAvailabilityAuditor:
     def __init__(self, network: StorageNetwork, num_nodes: int,
                  window: int = 2, sample_rate: float = 0.05, seed: int = 0,
                  stake: float = 1.0, slash_fraction: float = 0.5,
-                 challenger: int = -1):
+                 challenger: int = -1,
+                 metrics: Optional[MetricsRegistry] = None,
+                 namespace: str = "trust.da"):
         self.network = network
         self.window = int(window)
         self.sample_rate = float(sample_rate)
@@ -93,8 +96,10 @@ class DataAvailabilityAuditor:
         # chunk shared by every expert, say) or many rounds re-sample it
         self._outstanding: set = set()
         self._next_id = 0
-        self.stats = {"probed": 0, "satisfied": 0, "opened": 0,
-                      "slashed": 0, "repaired": 0, "deduped": 0}
+        self.stats = CounterGroup(
+            {"probed": 0, "satisfied": 0, "opened": 0,
+             "slashed": 0, "repaired": 0, "deduped": 0},
+            metrics, namespace)
 
     def _rng(self, round_id: int) -> np.random.Generator:
         return np.random.default_rng((self._seed * 7_368_787 + round_id) * 13)

@@ -43,6 +43,7 @@ import heapq
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.reputation import ReputationLedger
+from repro.obs.metrics import CounterGroup, MetricsRegistry
 from repro.trust.audit import (AuditReport, BatchRecomputeFn, FraudProof,
                                RecomputeFn, VerifierPool, verify_fraud_proof)
 from repro.trust.commitments import RoundCommitment, commit_outputs
@@ -154,7 +155,9 @@ class OptimisticProtocol:
                  reputation: Optional[ReputationLedger] = None,
                  stakes: Optional[StakeBook] = None,
                  court: Optional[DisputeCourt] = None,
-                 chained: bool = True):
+                 chained: bool = True,
+                 metrics: Optional[MetricsRegistry] = None,
+                 namespace: str = "trust"):
         self.cfg = cfg
         self.num_edges = num_edges
         self.reputation = reputation
@@ -171,7 +174,8 @@ class OptimisticProtocol:
             cfg.num_verifiers, cfg.audit_rate / max(cfg.num_verifiers, 1),
             cfg.lazy_verifier_prob, cfg.seed,
             stakes=cfg.verifier_stakes, reaudit_rate=cfg.reaudit_rate,
-            verifier_slash_fraction=cfg.verifier_slash_fraction)
+            verifier_slash_fraction=cfg.verifier_slash_fraction,
+            metrics=metrics, namespace=f"{namespace}.verifiers")
         # stakes/court may be shared with a sibling protocol instance (the
         # host's inference pipeline shares the training pipeline's bonds,
         # so one edge's deposit backs both workloads)
@@ -187,10 +191,18 @@ class OptimisticProtocol:
         self._audit_heap: List[Tuple[int, int]] = []     # (deadline, rid)
         self._audit_jobs: Dict[int, AuditJob] = {}
         self.rollbacks: List[RollbackRecord] = []
-        self.stats = {"committed": 0, "finalized": 0, "rolled_back": 0,
-                      "invalidated": 0, "audited_leaves": 0,
-                      "fraud_proofs": 0, "escalations": 0,
-                      "audit_drains": 0}
+        # phase-transition counters: with a registry these are the live
+        # metrics {namespace}.{committed,finalized,rolled_back,...} the
+        # obs layer reads (the host passes "trust.train"/"trust.infer"
+        # so sibling protocols never collide on metric names)
+        self._metrics = metrics
+        self._namespace = namespace
+        self.stats = CounterGroup(
+            {"committed": 0, "finalized": 0, "rolled_back": 0,
+             "invalidated": 0, "audited_leaves": 0,
+             "fraud_proofs": 0, "escalations": 0,
+             "audit_drains": 0},
+            metrics, namespace)
 
     # -------------------------------------------------------- executors
     def pick_executor(self, round_id: int) -> int:
@@ -263,6 +275,13 @@ class OptimisticProtocol:
                 jobs.append(job)
         if jobs:
             self.stats["audit_drains"] += 1
+            if self._metrics is not None:
+                # audit-burst size: how many windowed rounds one drain
+                # hands to the verifier pool at once
+                self._metrics.histogram(
+                    f"{self._namespace}.audit_burst_rounds",
+                    buckets=(1, 2, 4, 8, 16, 32, 64, 128)
+                ).observe(len(jobs))
         return jobs
 
     def drain_audits(self, now: Optional[int] = None
@@ -361,6 +380,13 @@ class OptimisticProtocol:
             self.rollbacks.append(RollbackRecord(
                 round_id=round_id, executor=state.executor,
                 invalidated=invalidated, at_clock=self.clock))
+            if self._metrics is not None:
+                # chain length of the rollback: the convicted round plus
+                # every optimistic descendant it voided
+                self._metrics.histogram(
+                    f"{self._namespace}.rollback_chain_rounds",
+                    buckets=(1, 2, 4, 8, 16, 32, 64, 128)
+                ).observe(1 + len(invalidated))
         elif state.tainted:
             state.phase = RoundPhase.INVALIDATED
             self.stats["invalidated"] += 1
