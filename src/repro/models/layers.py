@@ -119,10 +119,12 @@ def blockwise_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
 def decode_attention(q, k_cache, v_cache, pos, *, window=0, softcap=0.0):
     """Single-token attention against a cache.
 
-    q: (B, 1, H, D); caches: (B, cap, KH, D); pos: scalar int32 — number of
-    tokens already in the cache *including* the one just written at
-    ``pos % cap`` (ring) or ``pos`` (linear).  Entries with absolute index
-    > pos or <= pos - window are masked.
+    q: (B, 1, H, D); caches: (B, cap, KH, D); pos: int32 scalar or (B,)
+    vector — number of tokens already in the cache *including* the one
+    just written at ``pos % cap`` (ring) or ``pos`` (linear).  A vector
+    ``pos`` gives every batch row its own decode position (continuous
+    batching: co-batched requests at different depths).  Entries with
+    absolute index > pos or <= pos - window are masked.
     """
     B, cap, KH, D = k_cache.shape
     H = q.shape[2]
@@ -133,12 +135,21 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=0, softcap=0.0):
                    preferred_element_type=jnp.float32) * scale
     s = _softcap(s, softcap)
     slot = jnp.arange(cap)
-    if window:  # ring buffer: absolute index of slot i
-        absidx = pos - ((pos - slot) % cap)
-        valid = (absidx >= 0) & (absidx <= pos) & (absidx > pos - window)
+    if jnp.ndim(pos):                       # per-row positions: (B, cap)
+        p_ = pos[:, None]
+        if window:
+            absidx = p_ - ((p_ - slot[None, :]) % cap)
+            valid = (absidx >= 0) & (absidx <= p_) & (absidx > p_ - window)
+        else:
+            valid = slot[None, :] <= p_
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     else:
-        valid = slot <= pos
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+        if window:  # ring buffer: absolute index of slot i
+            absidx = pos - ((pos - slot) % cap)
+            valid = (absidx >= 0) & (absidx <= pos) & (absidx > pos - window)
+        else:
+            valid = slot <= pos
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache)
     return out.reshape(B, 1, H, D)
@@ -228,26 +239,39 @@ def _quantize_kv(t):
 def attn_decode(params, x, cache, pos, cfg, *, window=0, shard=None):
     """One-token decode. cache: {"k": (B,cap,KH,D), "v": ...} (+ optional
     int8 "k_scale"/"v_scale" when cfg.kv_cache_dtype == "int8").
-    Returns (out, new_cache)."""
+
+    ``pos`` is an int32 scalar (every row at the same depth — the
+    batch-synchronous path) or a (B,) vector (continuous batching: each
+    row writes/reads its own cache slot).  Returns (out, new_cache).
+    """
     B = x.shape[0]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    vec = jnp.ndim(pos) > 0
+    positions = (jnp.reshape(pos, (B, 1)).astype(jnp.int32) if vec
+                 else jnp.full((B, 1), pos, jnp.int32))
     q, k, v = attn_qkv(params, x, positions, cfg)
     cap = cache["k"].shape[1]
     slot = (pos % cap) if window else jnp.minimum(pos, cap - 1)
     kv_seq_ax = "cache_seq" if not window else "kv_seq"
     quantized = "k_scale" in cache
+
+    if vec:
+        rows = jnp.arange(B)
+
+        def put(buf, val):           # per-row scatter: row b writes slot[b]
+            return buf.at[rows, slot].set(val[:, 0])
+    else:
+        def put(buf, val):
+            return jax.lax.dynamic_update_slice_in_dim(buf, val, slot,
+                                                       axis=1)
+
     if quantized:  # §Perf iteration 4: int8 cache halves HBM cache reads
         kq, ks = _quantize_kv(k)
         vq, vs = _quantize_kv(v)
         new_cache = {
-            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot,
-                                                     axis=1),
-            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot,
-                                                     axis=1),
-            "k_scale": jax.lax.dynamic_update_slice_in_dim(
-                cache["k_scale"], ks, slot, axis=1),
-            "v_scale": jax.lax.dynamic_update_slice_in_dim(
-                cache["v_scale"], vs, slot, axis=1),
+            "k": put(cache["k"], kq),
+            "v": put(cache["v"], vq),
+            "k_scale": put(cache["k_scale"], ks),
+            "v_scale": put(cache["v_scale"], vs),
         }
         if shard is not None:
             new_cache["k"] = shard(new_cache["k"], "batch", kv_seq_ax,
@@ -259,10 +283,8 @@ def attn_decode(params, x, cache, pos, cfg, *, window=0, shard=None):
         v_cache = (new_cache["v"].astype(jnp.float32)
                    * new_cache["v_scale"][..., None]).astype(x.dtype)
     else:
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot,
-                                                      axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot,
-                                                      axis=1)
+        k_cache = put(cache["k"], k)
+        v_cache = put(cache["v"], v)
         if shard is not None:
             k_cache = shard(k_cache, "batch", kv_seq_ax, "kv_heads",
                             "head_dim")

@@ -202,8 +202,15 @@ def forward_train(params, tokens, cfg: ModelConfig, *, shard=None,
     return logits, aux
 
 
+def _mask_rows(mask, new, old):
+    """Row-select a cache leaf: rows where ``mask`` is False keep their
+    old value (the slot is not advancing this step)."""
+    m = mask.reshape((-1,) + (1,) * (new.ndim - 1))
+    return jnp.where(m, new, old)
+
+
 def _layer_decode(spec: LayerSpec, p, cache, x, pos, cfg, shard,
-                  expert_stats=False):
+                  expert_stats=False, write_mask=None):
     h = rmsnorm(x, p["norm1"], cfg.norm_eps)
     if spec.kind in ("attn", "local_attn"):
         window = cfg.sliding_window if spec.kind == "local_attn" else 0
@@ -215,6 +222,11 @@ def _layer_decode(spec: LayerSpec, p, cache, x, pos, cfg, shard,
     elif spec.kind == "ssm":
         y, new_cache = ssm_lib.ssm_decode(p["ssm"], h, cache, cfg,
                                           shard=shard)
+    if write_mask is not None:
+        # inactive slots (not decoding this step / past their prefill
+        # length) must not advance KV rows or recurrent state
+        new_cache = jax.tree_util.tree_map(
+            lambda n, o: _mask_rows(write_mask, n, o), new_cache, cache)
     x = x + y
     counts = None
     if spec.mlp != "none":
@@ -233,13 +245,20 @@ def _layer_decode(spec: LayerSpec, p, cache, x, pos, cfg, shard,
 
 
 def forward_decode(params, caches, tokens, pos, cfg: ModelConfig, *,
-                   shard=None, unroll=False, expert_stats=False):
-    """One decode step.  tokens: (B, 1); pos: scalar int32 (absolute
-    position of this token).  Returns (logits (B, 1, V), new_caches) —
-    plus, with ``expert_stats``, the per-MoE-layer routed-token counts
-    ``(num_moe_layers, E)`` in layer order (scanned blocks first, then
-    the remainder): the gate statistics a serving edge feeds its expert
-    cache/prefetcher with."""
+                   shard=None, unroll=False, expert_stats=False,
+                   write_mask=None):
+    """One decode step.  tokens: (B, 1); pos: int32 scalar (all rows at
+    the same absolute position — the batch-synchronous path) or (B,)
+    vector (continuous batching: per-slot positions).  Returns
+    (logits (B, 1, V), new_caches) — plus, with ``expert_stats``, the
+    per-MoE-layer routed-token counts ``(num_moe_layers, E)`` in layer
+    order (scanned blocks first, then the remainder): the gate
+    statistics a serving edge feeds its expert cache/prefetcher with.
+
+    ``write_mask`` (B,) bool: rows where it is False run the (padded)
+    compute but leave their KV rows and recurrent state untouched — the
+    fixed-shape active-slot mask that lets one compiled step serve any
+    batch occupancy without recompilation."""
     x = jnp.take(params["embed"], tokens, axis=0)
     if shard is not None:
         x = shard(x, "batch", "seq", "embed")
@@ -252,7 +271,7 @@ def forward_decode(params, caches, tokens, pos, cfg: ModelConfig, *,
         for i, spec in enumerate(cfg.block_pattern):
             x, new_cch[str(i)], c = _layer_decode(
                 spec, blk[str(i)], cch[str(i)], x, pos, cfg, shard,
-                expert_stats=expert_stats)
+                expert_stats=expert_stats, write_mask=write_mask)
             if c is not None:
                 cnts.append(c)
         if expert_stats and cnts:
@@ -274,7 +293,8 @@ def forward_decode(params, caches, tokens, pos, cfg: ModelConfig, *,
         for i, spec in enumerate(cfg.remainder):
             x, nc, c = _layer_decode(spec, params["remainder"][i],
                                      caches["remainder"][i], x, pos, cfg,
-                                     shard, expert_stats=expert_stats)
+                                     shard, expert_stats=expert_stats,
+                                     write_mask=write_mask)
             new_caches["remainder"].append(nc)
             if c is not None:
                 counts.append(c[None])
@@ -287,6 +307,65 @@ def forward_decode(params, caches, tokens, pos, cfg: ModelConfig, *,
                                 jnp.int32))
         return logits, new_caches, stats
     return logits, new_caches
+
+
+def forward_serve_chunk(params, caches, tokens, start, pos, lengths, adv,
+                        cfg: ModelConfig, *, shard=None, unroll=False,
+                        expert_stats=False):
+    """Fused serving macro-step: ``C`` engine ticks in ONE compiled call
+    (a ``lax.scan`` of masked greedy decode micro-steps), advancing
+    every batch slot one position per micro-step — prefilling slots
+    consume prompt tokens while decoding slots keep generating
+    autoregressively, so a long prompt is chunked through without ever
+    stalling in-flight decode, and the per-call Python/dispatch overhead
+    amortizes over the whole chunk.
+
+    tokens: (B, C) int32 — slot b's next prompt tokens, left-aligned and
+    zero-padded past ``lengths[b]``; start: (B,) int32 — the last token
+    slot b generated (fed at the first micro-step past its prompt; 0 if
+    none); pos: (B,) int32 — slot b's absolute position at micro-step 0;
+    lengths: (B,) int32 in [0, C] — how many prompt columns slot b
+    consumes; adv: (B,) int32 in [0, C] — how many micro-steps slot b
+    advances at all (its cache writes are masked from step ``adv[b]``
+    on; 0 = idle slot, pure padding).
+
+    Micro-step t feeds ``tokens[:, t]`` where ``t < lengths``, else each
+    slot's previous greedy output (carried across the scan, seeded from
+    ``start``) — so a slot whose prompt ends inside the chunk hands off
+    to generation mid-scan with no host round-trip.
+
+    Returns ``(out_tokens (C, B), new_caches[, stats])``:
+    ``out_tokens[t, b]`` is slot b's greedy next token after micro-step
+    t — a generated token iff the slot was at or past its prompt
+    boundary there (the host emits exactly those).  ``stats`` (with
+    ``expert_stats``) sums the per-MoE-layer routed-token counts over
+    the chunk's micro-steps."""
+    B, C = tokens.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    adv = jnp.asarray(adv, jnp.int32)
+
+    def micro(carry, xt):
+        caches, cur = carry
+        tok, t = xt                              # (B,), scalar step index
+        feed = jnp.where(t < lengths, tok, cur)
+        out = forward_decode(params, caches, feed[:, None], pos + t, cfg,
+                             shard=shard, unroll=unroll,
+                             expert_stats=expert_stats,
+                             write_mask=t < adv)
+        if expert_stats:
+            logits, caches, stats = out
+        else:
+            (logits, caches), stats = out, None
+        nxt = logits[:, -1].argmax(axis=-1).astype(jnp.int32)
+        return (caches, nxt), (nxt, stats)
+
+    (caches, _), (outs, stats) = jax.lax.scan(
+        micro, (caches, jnp.asarray(start, jnp.int32)),
+        (tokens.T, jnp.arange(C)))
+    if expert_stats:
+        return outs, caches, stats.sum(axis=0)
+    return outs, caches
 
 
 def lm_loss(logits, labels, mask=None):

@@ -1,29 +1,41 @@
-"""Batched serving engine: continuous-batching-style slot manager over the
-single-token ``decode_step`` with a fixed-capacity KV cache.
+"""Continuous-batching serving engine with prefill/decode disaggregation.
 
-Requests (prompt + max_new_tokens) are packed into batch slots; prompts
-are prefilled token-by-token through the decode path (CPU-scale; on TPU
-the prefill_step handles whole prompts), generation is greedy, and
-finished slots are refilled from the queue — the serving analogue of the
-paper's edge-layer inference (Steps 1-3, no updates).
+The engine serves requests (prompt + max_new_tokens) from a fixed set of
+batch slots, but — unlike the fixed-slot engine it replaces — the batch
+composition changes **every decode step**: finished requests are evicted
+and queued requests admitted each tick (``scheduler.SlotScheduler``),
+so a short request never waits for a long co-batched one to drain.
+Prefill is disaggregated from decode inside ONE fused compiled step
+(``train.step.make_serve_chunk_step``): each call runs C engine ticks
+as a ``lax.scan`` in which prefilling slots consume up to C prompt
+tokens while decoding slots keep generating autoregressively — so a
+long prompt costs ceil(len/C) dispatches instead of len, and in-flight
+decode never stalls behind a token-by-token prompt feed.  Shapes are
+fixed per pow2 width bucket (per-slot positions, per-row write masks),
+so occupancy changes never recompile and there is no per-token Python
+dispatch inside a chunk.  ``scheduling="fixed"`` keeps the legacy
+batch-synchronous engine (admit only into a drained batch, prompts fed
+token-by-token through the decode step) as the benchmark baseline and
+trust-equivalence oracle.
 
 Verified sessions (``trust=TrustConfig(...)``): the optimistic
 commit-challenge-audit protocol from ``repro.trust`` applied to
-streaming inference.  Every engine tick appends a leaf digest of the
-slot's emitted token to the request's session commitment; when the
-request finishes, the Merkle root over its per-tick leaves is recorded
-in the session log and the request enters an asynchronous challenge
-window (measured in engine ticks).  ``completed`` exposes only
-*finalized* requests — window closed with no revocation — and auditors
-can spot-check sampled leaves against the committed root at any time
-(``audit_session``); a mismatch revokes the request instead of
-finalizing it.
+streaming inference.  Every emitted token is digested into a session
+leaf, and the engine appends **one Merkle root per batch tick** — a
+single tree over all slots' leaves for that tick
+(``trust.session.commit_tick``), with per-session inclusion paths
+derived from it — instead of one append per stream.  Per-session leaf
+digests and sealed roots are unchanged, so ``audit_session`` verdicts
+are bit-identical to the per-stream scheme on the same trace; the tick
+tree adds an inclusion check that catches post-hoc rewrites of a
+session's leaf list.  Finished requests enter an asynchronous challenge
+window (engine ticks); ``completed`` exposes only *finalized* requests,
+and a mismatching audit revokes a request instead of finalizing it.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from collections import deque
 from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
@@ -35,31 +47,18 @@ from repro.models.builder import materialize
 from repro.models.config import ModelConfig
 from repro.obs import Observability
 from repro.obs.metrics import MetricsRegistry
+from repro.serve.scheduler import SlotScheduler, SlotState
 from repro.storage import (ExpertCache, ExpertStore, GateEMA,
                            StorageNetwork)
-from repro.train.step import make_decode_step
+from repro.train.step import make_serve_chunk_step
 from repro.trust.audit import VerifierPool
 from repro.trust.commitments import MerkleTree, RoundCommitment, leaf_digest
 from repro.trust.protocol import ChallengeWindow, TrustConfig
+from repro.trust.session import (SessionLeafRef, TickCommitment, commit_tick,
+                                 verify_session_inclusion)
 
-
-@dataclasses.dataclass
-class SlotState:
-    request_id: int = -1
-    pos: int = 0
-    prompt: np.ndarray = dataclasses.field(
-        default_factory=lambda: np.zeros(0, np.int32))
-    cursor: int = 0                      # next prompt token to consume
-    to_generate: int = 0
-    generated: List[int] = dataclasses.field(default_factory=list)
-
-    @property
-    def active(self) -> bool:
-        return self.request_id >= 0
-
-    @property
-    def prefilling(self) -> bool:
-        return self.cursor < len(self.prompt)
+__all__ = ["EdgeStorageConfig", "ServingEngine", "SessionRecord",
+           "SlotState"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,9 +84,9 @@ class EdgeStorageConfig:
 
 class _EdgeExpertRuntime:
     """The engine's storage-layer sidecar: per-(MoE layer, expert) units
-    registered once at startup, resolved per tick from the decode step's
-    routing counts (layer order identical to
-    ``transformer.forward_decode(expert_stats=True)``: scanned blocks
+    registered once at startup, resolved per tick from the routing
+    counts of that tick's prefill + decode steps (layer order identical
+    to ``transformer.forward_decode(expert_stats=True)``: scanned blocks
     block-major, then the remainder)."""
 
     def __init__(self, cfg: ModelConfig, params, scfg: EdgeStorageConfig,
@@ -185,11 +184,14 @@ def _tick_leaf(request_id: int, tick: int, token: int) -> str:
 
 @dataclasses.dataclass
 class SessionRecord:
-    """Per-request commitment stream: one leaf per generated token."""
+    """Per-request commitment stream: one leaf per generated token, plus
+    (in the batched-commitment engine) one inclusion reference per leaf
+    into the batch tick tree it was committed under."""
     request_id: int
     leaves: List[str] = dataclasses.field(default_factory=list)
     ticks: List[int] = dataclasses.field(default_factory=list)
     tokens: List[int] = dataclasses.field(default_factory=list)
+    refs: List[SessionLeafRef] = dataclasses.field(default_factory=list)
     root: str = ""
     finalized: bool = False
     revoked: bool = False
@@ -223,6 +225,7 @@ class SessionRecord:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
                  cache_len: int = 256, mesh=None,
+                 scheduling: str = "continuous", prefill_chunk: int = 16,
                  trust: Optional[TrustConfig] = None,
                  expert_storage: Optional[EdgeStorageConfig] = None,
                  obs: Optional[Observability] = None):
@@ -233,12 +236,14 @@ class ServingEngine:
         self.obs = obs if obs is not None else Observability()
         self.batch = batch_slots
         self.cache_len = cache_len
+        self.prefill_chunk = max(1, int(prefill_chunk))
         self.caches = materialize(
             tfm.cache_decl(cfg, batch_slots, cache_len),
             jax.random.PRNGKey(0))
+        self.sched = SlotScheduler(batch_slots, policy=scheduling)
         # ---- edge expert storage (MoE models): per-tick resolution of
         # the activated experts through a bounded ExpertCache, fed by
-        # the decode step's routing counts
+        # the prefill/decode steps' routing counts
         self.edge = None
         if expert_storage is not None:
             has_moe = any(s.mlp == "moe"
@@ -248,18 +253,23 @@ class ServingEngine:
                 raise ValueError("expert_storage needs a MoE model")
             self.edge = _EdgeExpertRuntime(cfg, params, expert_storage,
                                            metrics=self.obs.metrics)
-        self._decode = jax.jit(make_decode_step(
+        # ONE compiled fused step: C engine ticks per call (C=1 pure
+        # decode up to C=prefill_chunk while prompts are chunking), fixed
+        # (B, C) shapes per pow2 width bucket (jax.jit's shape cache) —
+        # occupancy changes never recompile, and there is no per-token
+        # Python dispatch inside a chunk
+        self._step_fn = jax.jit(make_serve_chunk_step(
             cfg, mesh, expert_stats=self.edge is not None))
-        self.slots = [SlotState() for _ in range(batch_slots)]
-        self.queue: deque = deque()
         self.tick = 0
-        self._tick_lat_s = 0.0          # decode latency of the last tick
-        self._submit_order: List[int] = []
+        self.steps = 0                  # fused macro-step invocations
         self._done: Dict[int, List[int]] = {}
         # ---- verified-session state (optimistic trust layer)
         self.trust = trust
         self.records: Dict[int, SessionRecord] = {}
         self.session_log: List[Dict] = []       # commit/finalize/revoke events
+        # the on-chain session commitment stream: ONE append per batch
+        # tick (a Merkle root over every token emitted that tick)
+        self.tick_commitments: List[TickCommitment] = []
         self._window = (ChallengeWindow(trust.challenge_window)
                         if trust is not None else None)
         # audit_rate is the pool-wide sampled fraction (same contract as
@@ -285,6 +295,26 @@ class ServingEngine:
         # O(open), not O(all sessions ever served)
         self._open_sessions: set = set()
 
+    # ------------------------------------------------------------- views
+    @property
+    def scheduling(self) -> str:
+        return self.sched.policy
+
+    @property
+    def slots(self) -> List[SlotState]:
+        return self.sched.slots
+
+    @property
+    def queue(self):
+        return self.sched.queue
+
+    @property
+    def request_meta(self) -> Dict[int, Dict[str, int]]:
+        """Per-request tick milestones: submitted/admitted/first-token/
+        finished — what the serving benchmark derives TTFT and queueing
+        delay from."""
+        return self.sched.meta
+
     @property
     def verified(self) -> bool:
         return self.trust is not None
@@ -294,9 +324,9 @@ class ServingEngine:
         """Finished — and, in verified mode, *finalized* — requests, in
         request-submission order (deterministic output)."""
         if not self.verified:
-            return {rid: self._done[rid] for rid in self._submit_order
+            return {rid: self._done[rid] for rid in self.sched.submit_order
                     if rid in self._done}
-        return {rid: self._done[rid] for rid in self._submit_order
+        return {rid: self._done[rid] for rid in self.sched.submit_order
                 if rid in self._finalized}
 
     @property
@@ -304,51 +334,88 @@ class ServingEngine:
         """Finished requests still inside their challenge window."""
         if not self.verified:
             return []
-        return [rid for rid in self._submit_order
+        return [rid for rid in self.sched.submit_order
                 if rid in self._done and rid not in self._finalized
                 and not self.records[rid].revoked]
 
     def submit(self, requests: Iterable[dict]):
-        for r in requests:
-            self.queue.append(r)
-            self._submit_order.append(r["id"])
+        self.sched.submit(requests, self.tick)
 
-    def _fill_slots(self):
-        # batch-synchronous refill: new requests enter only when the whole
-        # batch drained, so every slot shares one decode position and no
-        # slot attends a predecessor's stale cache rows
-        if any(s.active for s in self.slots):
-            return
-        if not self.queue:
-            return
-        self.caches = jax.tree_util.tree_map(jnp.zeros_like, self.caches)
-        for slot in self.slots:
-            if self.queue:
-                r = self.queue.popleft()
-                slot.request_id = r["id"]
-                slot.pos = 0
-                slot.prompt = np.asarray(r["prompt"], np.int32).reshape(-1)
-                slot.cursor = 0
-                slot.to_generate = int(r["max_new_tokens"])
-                slot.generated = []
-                if self.verified:
-                    self.records[r["id"]] = SessionRecord(request_id=r["id"])
-                    self._open_sessions.add(r["id"])
+    def warmup(self) -> int:
+        """Compile every fused-step width bucket up front (the pow2s up
+        to ``prefill_chunk``; just C=1 under the fixed policy) against
+        zero-advance dummy batches — ``adv=0`` masks every cache write,
+        so state is untouched — so no compile ever lands in a served
+        request's latency.  Returns the number of buckets compiled."""
+        w, n = 1, 0
+        while True:
+            batch = {"tokens": jnp.zeros((self.batch, w), jnp.int32),
+                     "start": jnp.zeros(self.batch, jnp.int32),
+                     "pos": jnp.zeros(self.batch, jnp.int32),
+                     "lengths": jnp.zeros(self.batch, jnp.int32),
+                     "adv": jnp.zeros(self.batch, jnp.int32)}
+            out = self._step_fn(self.params, self.caches, batch)
+            jax.block_until_ready(out[0])
+            n += 1
+            if self.sched.policy != "continuous" \
+                    or w * 2 > self.prefill_chunk:
+                return n
+            w *= 2
 
-    def _emit(self, slot: SlotState, token: int) -> None:
+    # ------------------------------------------------------- slot intake
+    def _admit(self) -> None:
+        admitted = self.sched.admit(self.tick)
+        if not admitted:
+            return
+        self._reset_slot_caches([i for i, _ in admitted])
+        if self.verified:
+            for _, slot in admitted:
+                rid = slot.request_id
+                self.records[rid] = SessionRecord(request_id=rid)
+                self._open_sessions.add(rid)
+
+    def _reset_slot_caches(self, idxs: List[int]) -> None:
+        """Zero the admitted slots' cache rows (KV + recurrent state) —
+        the continuous-batching replacement for the fixed-slot engine's
+        whole-cache reset at batch refill."""
+        sel = np.zeros(self.batch, bool)
+        sel[idxs] = True
+        sel = jnp.asarray(sel)
+
+        def zero_rows(axis):
+            def f(a):
+                m = sel.reshape((1,) * axis + (-1,)
+                                + (1,) * (a.ndim - axis - 1))
+                return jnp.where(m, jnp.zeros((), a.dtype), a)
+            return f
+
+        # stacked block caches carry a leading layer axis: batch is axis 1
+        new = {"blocks": jax.tree_util.tree_map(zero_rows(1),
+                                                self.caches["blocks"])}
+        if "remainder" in self.caches:
+            new["remainder"] = jax.tree_util.tree_map(
+                zero_rows(0), self.caches["remainder"])
+        self.caches = new
+
+    # --------------------------------------------------------- emissions
+    def _emit(self, slot: SlotState, token: int, lat_s: float) -> None:
         slot.generated.append(token)
+        if len(slot.generated) == 1:
+            slot.first_token_tick = self.tick
+            self.sched.meta[slot.request_id]["first_token_tick"] = self.tick
         m = self.obs.metrics
         m.counter("serve.tokens").add(1)
-        m.histogram("serve.token_latency_s").observe(self._tick_lat_s)
+        m.histogram("serve.token_latency_s").observe(lat_s)
         m.histogram("serve.token_latency_s",
-                    session=slot.request_id).observe(self._tick_lat_s)
+                    session=slot.request_id).observe(lat_s)
         if self.verified:
             self.records[slot.request_id].append(self.tick, token)
 
-    def _finish(self, slot: SlotState) -> None:
-        rid = slot.request_id
-        self._done[rid] = slot.generated[:slot.to_generate]
-        slot.request_id = -1
+    def _finish(self, index: int) -> None:
+        slot = self.sched.slots[index]
+        generated = slot.generated[:slot.to_generate]
+        rid = self.sched.release(index, self.tick)
+        self._done[rid] = generated
         if not self.verified:
             return
         rec = self.records[rid]
@@ -361,6 +428,187 @@ class ServingEngine:
             heapq.heappush(self._audit_queue,
                            (self.tick + self.trust.challenge_window, rid))
 
+    # ----------------------------------------------------- the macro-step
+    def step(self):
+        """One fused macro-step: admit from the queue, then run C engine
+        ticks in ONE compiled call — prefilling slots chunk-consume
+        their prompts while decoding slots keep generating (C=1 when no
+        prompt is in flight, up to ``prefill_chunk`` while one is).
+        Per engine tick, host-side: emit, batch-commit the tick's
+        Merkle leaf set, evict finished slots.  In verified mode, ticks
+        keep running after the queue drains until every challenge
+        window has closed."""
+        with self.obs.span("step", metric="serve.tick_s", tick=self.tick):
+            return self._step_inner()
+
+    def _step_inner(self):
+        with self.obs.span("admit", metric="serve.admit_s",
+                           tick=self.tick):
+            self._admit()
+        if not self.sched.any_active:
+            if self.verified and len(self._window):
+                self.tick += 1               # idle tick: windows still age
+                self._expire_windows()
+                return bool(len(self._window))
+            return False
+        self.steps += 1
+        m = self.obs.metrics
+        m.histogram("serve.occupancy").observe(self.sched.occupancy())
+        m.gauge("serve.queue_depth").set(self.sched.depth())
+        slots = self.sched.slots
+        continuous = self.sched.policy == "continuous"
+
+        # ---- chunk width C (continuous): the largest pow2 <= the
+        # busiest active slot's remaining work (prompt left + tokens
+        # left to generate, cache-bounded) — so no tick in the chunk is
+        # pure waste past everyone's completion — capped by
+        # prefill_chunk and every active slot's cache headroom.  The
+        # pow2 rounding bounds the compile set to log2(prefill_chunk)+1
+        # shape buckets.  The fixed baseline always runs C=1 with a
+        # 1-token prompt feed — the legacy batch-synchronous engine,
+        # bit for bit.
+        if continuous:
+            need = self.sched.prefill_lengths(self.prefill_chunk,
+                                              self.cache_len)
+            work = max((len(s.prompt) - s.cursor)
+                       + max(s.to_generate - len(s.generated), 0)
+                       for s in slots if s.active)
+            headroom = min(self.cache_len - 1 - s.pos
+                           for s in slots if s.active)
+            cmax = max(1, min(self.prefill_chunk, headroom, work))
+            C = 1 << (cmax.bit_length() - 1)      # round DOWN to pow2
+            need = np.minimum(need, C).astype(np.int32)
+        else:
+            C = 1
+            need = np.array([1 if s.prefilling else 0 for s in slots],
+                            np.int32)
+
+        tokens = np.zeros((self.batch, C), np.int32)
+        start = np.zeros(self.batch, np.int32)
+        pos = np.zeros(self.batch, np.int32)
+        adv = np.zeros(self.batch, np.int32)
+        for i, s in enumerate(slots):
+            if not s.active:
+                continue
+            n = int(need[i])
+            pos[i] = s.pos
+            if n:
+                tokens[i, :n] = s.prompt[s.cursor:s.cursor + n]
+            if s.generated:
+                start[i] = s.generated[-1]
+            # a slot that finishes its prompt inside the chunk (or is
+            # already decoding) generates for the rest of the scan; a
+            # chunk/headroom-capped prefill slot stops at its cap
+            adv[i] = C if s.cursor + n >= len(s.prompt) else n
+        batch = {"tokens": jnp.asarray(tokens), "start": jnp.asarray(start),
+                 "pos": jnp.asarray(pos), "lengths": jnp.asarray(need),
+                 "adv": jnp.asarray(adv)}
+        prefill_now = continuous and bool((need > 0).any())
+        name, metric = (("prefill", "serve.prefill_s") if prefill_now
+                        else ("decode", "serve.decode_s"))
+        with self.obs.span(name, metric=metric, tick=self.tick,
+                           width=C) as sp:
+            out = self._step_fn(self.params, self.caches, batch)
+            if self.edge is not None:
+                outs, self.caches, stats = out
+            else:
+                (outs, self.caches), stats = out, None
+            outs = np.asarray(outs)          # (C, B) greedy next tokens
+        if self.edge is not None and stats is not None:
+            # resolve the chunk's activated experts through the edge
+            # cache (cold: chunk fetches; warm: hits) + EMA prefetch
+            self.edge.on_tick(np.asarray(stats))
+        lat = sp.dur_s / C
+
+        # ---- replay the chunk host-side, one engine tick per micro-step
+        for t in range(C):
+            self.tick += 1
+            emissions: List[Tuple[int, int, int]] = []  # (slot, rid, tok)
+            for i, s in enumerate(slots):
+                if not s.active:             # idle, or finished mid-chunk
+                    continue
+                n = int(need[i])
+                if t < n:                    # consumed a prompt token
+                    s.cursor += 1
+                    s.pos += 1
+                    if s.cursor == len(s.prompt):
+                        tok = int(outs[t, i])   # first generated token
+                        self._emit(s, tok, lat)
+                        emissions.append((i, s.request_id, tok))
+                elif int(adv[i]) == C and s.cursor >= len(s.prompt):
+                    tok = int(outs[t, i])    # autoregressive continuation
+                    self._emit(s, tok, lat)
+                    emissions.append((i, s.request_id, tok))
+                    s.pos += 1
+            if self.verified and emissions:
+                self._commit_tick(emissions)
+            for i, s in enumerate(slots):
+                if not s.active:
+                    continue
+                done = (not s.prefilling
+                        and len(s.generated) >= s.to_generate)
+                if done or s.pos >= self.cache_len - 1:
+                    self._finish(i)
+            if self.verified:
+                self._expire_windows()
+        return True
+
+    def _commit_tick(self, emissions: List[Tuple[int, int, int]]) -> None:
+        """One Merkle append for the whole batch tick: a tree over every
+        token emitted this tick (slot order); each session stores its
+        inclusion path into it."""
+        with self.obs.span("commit", metric="serve.commit_s",
+                           tick=self.tick, leaves=len(emissions)):
+            entries = [(rid, self.records[rid].leaves[-1])
+                       for _, rid, _ in emissions]
+            tc, refs = commit_tick(self.tick, entries)
+            self.tick_commitments.append(tc)
+            for rid, ref in refs.items():
+                self.records[rid].refs.append(ref)
+            m = self.obs.metrics
+            m.counter("serve.commit.appends").add(1)
+            m.counter("serve.commit.leaves").add(len(entries))
+
+    def run(self, max_ticks: int = 10_000) -> Dict[int, List[int]]:
+        ticks = 0
+        while self.step() and ticks < max_ticks:
+            ticks += 1
+        return self.completed
+
+    # ------------------------------------------------------- observability
+    def obs_report(self) -> Dict:
+        """Serving-side view over the metrics registry: tick/token
+        throughput, wall-clock totals per phase, token-latency
+        percentiles (aggregate and per session), slot occupancy, the
+        batched-commitment append counters, plus the edge storage
+        section when edge expert storage is on."""
+        m = self.obs.metrics
+        out = {
+            "ticks": self.tick,
+            "tokens": int(m.value("serve.tokens")),
+            "tick_s": float(m.value("serve.tick_s")),
+            "admit_s": float(m.value("serve.admit_s")),
+            "prefill_s": float(m.value("serve.prefill_s")),
+            "decode_s": float(m.value("serve.decode_s")),
+            "commit_s": float(m.value("serve.commit_s")),
+            "audit_offpath_s": float(m.value("serve.audit_s")),
+            "token_latency": m.histogram("serve.token_latency_s").snapshot(),
+            "occupancy": m.histogram("serve.occupancy").snapshot(),
+            "commit_appends": int(m.value("serve.commit.appends")),
+            "commit_leaves": int(m.value("serve.commit.leaves")),
+            "sessions": {
+                name.split("session=", 1)[1].rstrip("}"): snap
+                for name, snap in
+                m.snapshot("serve.token_latency_s{").items()},
+        }
+        if self.edge is not None:
+            out["edge"] = self.edge.report()
+        return out
+
+    def report(self) -> Dict:
+        return self.obs_report()
+
+    # ------------------------------------------------ audits (verified)
     def _audit_full(self, rid: int) -> None:
         """One spot-check pass per verifier (stopping early once a fraud
         revokes the session)."""
@@ -425,105 +673,14 @@ class ServingEngine:
             self.session_log.append({"event": "finalize", "request": rid,
                                      "tick": self.tick})
 
-    def step(self):
-        """One engine tick: each active slot consumes one prompt token or
-        generates one token.  (All slots share one decode position per
-        tick; a per-slot position mask keeps semantics correct.)  In
-        verified mode, ticks keep running after the queue drains until
-        every challenge window has closed."""
-        with self.obs.span("tick", metric="serve.tick_s", tick=self.tick):
-            return self._step_inner()
-
-    def _step_inner(self):
-        self._fill_slots()
-        if not any(s.active for s in self.slots):
-            if self.verified and len(self._window):
-                self.tick += 1               # idle tick: windows still age
-                self._expire_windows()
-                return bool(len(self._window))
-            return False
-        tokens = np.zeros((self.batch, 1), np.int32)
-        for i, s in enumerate(self.slots):
-            if not s.active:
-                continue
-            if s.prefilling:
-                tokens[i, 0] = s.prompt[s.cursor]
-            elif s.generated:
-                tokens[i, 0] = s.generated[-1]
-        pos = max((s.pos for s in self.slots if s.active), default=0)
-        batch = {"tokens": jnp.asarray(tokens), "pos": jnp.int32(pos)}
-        with self.obs.span("decode", metric="serve.decode_s",
-                           tick=self.tick) as dsp:
-            if self.edge is not None:
-                nxt, self.caches, stats = self._decode(self.params,
-                                                       self.caches, batch)
-                # resolve THIS tick's activated experts through the edge
-                # cache (cold: chunk fetches; warm: hits) + EMA prefetch
-                self.edge.on_tick(np.asarray(stats))
-            else:
-                nxt, self.caches = self._decode(self.params, self.caches,
-                                                batch)
-            nxt = np.asarray(nxt)
-        # every token emitted this tick shares the tick's decode latency
-        self._tick_lat_s = dsp.dur_s
-        self.tick += 1
-        for i, s in enumerate(self.slots):
-            if not s.active:
-                continue
-            if s.prefilling:
-                s.cursor += 1
-                if not s.prefilling:
-                    self._emit(s, int(nxt[i]))   # first generated token
-            else:
-                self._emit(s, int(nxt[i]))
-            s.pos += 1
-            done = (not s.prefilling
-                    and len(s.generated) >= s.to_generate)
-            if done or s.pos >= self.cache_len - 1:
-                self._finish(s)
-        if self.verified:
-            self._expire_windows()
-        return True
-
-    def run(self, max_ticks: int = 10_000) -> Dict[int, List[int]]:
-        ticks = 0
-        while self.step() and ticks < max_ticks:
-            ticks += 1
-        return self.completed
-
-    def obs_report(self) -> Dict:
-        """Serving-side view over the metrics registry: tick/token
-        throughput, wall-clock totals, token-latency percentiles
-        (aggregate and per session), plus the edge storage section when
-        edge expert storage is on."""
-        m = self.obs.metrics
-        out = {
-            "ticks": self.tick,
-            "tokens": int(m.value("serve.tokens")),
-            "tick_s": float(m.value("serve.tick_s")),
-            "decode_s": float(m.value("serve.decode_s")),
-            "audit_offpath_s": float(m.value("serve.audit_s")),
-            "token_latency": m.histogram("serve.token_latency_s").snapshot(),
-            "sessions": {
-                name.split("session=", 1)[1].rstrip("}"): snap
-                for name, snap in
-                m.snapshot("serve.token_latency_s{").items()},
-        }
-        if self.edge is not None:
-            out["edge"] = self.edge.report()
-        return out
-
-    def report(self) -> Dict:
-        return self.obs_report()
-
-    # ------------------------------------------------ audits (verified)
     def audit_session(self, request_id: int, verifier: int = 0) -> Dict:
         """Spot-check sampled leaves of a session commitment through the
         same batched auditor as training rounds: the sampled (tick,
         token) records are re-digested in one ``leaf_digest_batch`` pass
-        and compared against the sealed leaves.  A mismatch (the served
-        stream was altered after commitment) revokes the request: it
-        will never finalize."""
+        and compared against the sealed leaves, then proven against both
+        the sealed per-session root AND the batch tick roots the tokens
+        were served under.  A mismatch (the served stream was altered
+        after commitment) revokes the request: it will never finalize."""
         if not self.verified:
             raise ValueError("engine was not started with a TrustConfig")
         rec = self.records[request_id]
@@ -562,6 +719,12 @@ class ServingEngine:
                 leaf for leaf in sampled
                 if not MerkleTree.verify(rec.root, rec.leaves[leaf],
                                          tree.prove(leaf))})
+        # inclusion check against the batch tick trees: every sampled
+        # leaf must still be the one committed (one append per tick for
+        # the whole batch) when its token was served
+        if rec.refs and len(rec.refs) == len(rec.leaves):
+            bad = verify_session_inclusion(rec.leaves, rec.refs, sampled)
+            mismatches = sorted(set(mismatches) | set(bad))
         rec.audited = True
         if mismatches:
             self._revoke_session(request_id, mismatches)

@@ -115,7 +115,12 @@ def make_decode_step(cfg: ModelConfig, mesh=None, unroll=False,
                      expert_stats=False):
     """``expert_stats=True`` (decoder-only MoE models) makes the step
     also return the per-MoE-layer routed-token counts — what the serving
-    engine's edge expert cache resolves activated experts from."""
+    engine's edge expert cache resolves activated experts from.
+
+    The batch may carry ``pos`` as a scalar (every row at the same depth)
+    or a (B,) vector, and an optional (B,) bool ``active`` mask: inactive
+    rows run the padded compute but leave their caches untouched — the
+    fixed-shape contract continuous batching compiles once against."""
     from repro.sharding import use_fsdp
     shard = Sharder(mesh, logical_rules(mesh, cfg),
                     fsdp=use_fsdp(cfg, "decode",
@@ -124,22 +129,59 @@ def make_decode_step(cfg: ModelConfig, mesh=None, unroll=False,
 
     def decode_step(params, caches, batch):
         tokens, pos = batch["tokens"], batch["pos"]
+        active = batch.get("active")
         if cfg.is_encoder_decoder:
+            if active is not None:
+                raise NotImplementedError(
+                    "active-slot masking targets decoder-only archs")
             logits, caches = encdec.forward_decode(params, caches, tokens,
                                                    pos, cfg, shard=shard,
                                                    unroll=unroll)
         elif expert_stats:
             logits, caches, stats = tfm.forward_decode(
                 params, caches, tokens, pos, cfg, shard=shard,
-                unroll=unroll, expert_stats=True)
+                unroll=unroll, expert_stats=True, write_mask=active)
             return logits[:, -1].argmax(axis=-1), caches, stats
         else:
             logits, caches = tfm.forward_decode(params, caches, tokens, pos,
                                                 cfg, shard=shard,
-                                                unroll=unroll)
+                                                unroll=unroll,
+                                                write_mask=active)
         return logits[:, -1].argmax(axis=-1), caches
 
     return decode_step
+
+
+def make_serve_chunk_step(cfg: ModelConfig, mesh=None, unroll=False,
+                          expert_stats=False):
+    """Fused serving macro-step for the engine: one compiled call runs C
+    engine ticks (``tfm.forward_serve_chunk`` — a ``lax.scan`` of masked
+    greedy decode micro-steps) in which prefilling slots chunk-consume
+    their prompts while decoding slots keep generating autoregressively.
+    Long prompts cost ceil(len/C) dispatches instead of len, in-flight
+    decode is never stalled behind a token-by-token prompt feed, and
+    per-call overhead amortizes over the chunk.
+
+    batch: ``tokens`` (B, C) int32, ``start`` (B,) int32 (last generated
+    token per slot), ``pos`` (B,) int32, ``lengths`` (B,) int32 (prompt
+    columns consumed), ``adv`` (B,) int32 (micro-steps the slot advances
+    at all; 0 = idle padding).  Returns (out_tokens (C, B),
+    caches[, stats])."""
+    from repro.sharding import use_fsdp
+    if cfg.is_encoder_decoder:
+        raise NotImplementedError("serve chunk drives decoder-only archs")
+    shard = Sharder(mesh, logical_rules(mesh, cfg),
+                    fsdp=use_fsdp(cfg, "decode",
+                                  mesh.devices.shape[-1])) \
+        if mesh is not None else None
+
+    def serve_chunk_step(params, caches, batch):
+        return tfm.forward_serve_chunk(
+            params, caches, batch["tokens"], batch["start"], batch["pos"],
+            batch["lengths"], batch["adv"], cfg, shard=shard,
+            unroll=unroll, expert_stats=expert_stats)
+
+    return serve_chunk_step
 
 
 def make_step(cfg: ModelConfig, kind: str, mesh=None,

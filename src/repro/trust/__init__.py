@@ -30,6 +30,10 @@ Modules
 - ``protocol``: the round state machine (commit -> optimistic accept ->
   async challenge window -> finalize/rollback) gluing the above to the
   ledger.
+- ``session``: batched per-tick session commitments for the serving
+  engine — one Merkle append per batch tick (one tree over all active
+  slots' token digests), with per-session inclusion paths derived from
+  it.
 - ``da`` (import directly — not re-exported here, it depends on
   ``repro.storage`` which itself imports this package): data-availability
   challenges holding storage replica nodes to the chunks they committed
@@ -43,6 +47,8 @@ from repro.trust.commitments import (MerklePath, MerkleTree, RoundCommitment,
                                      leaf_digest_batch)
 from repro.trust.protocol import (AuditJob, OptimisticProtocol, RollbackRecord,
                                   RoundPhase, RoundState, TrustConfig)
+from repro.trust.session import (SessionLeafRef, TickCommitment, commit_tick,
+                                 verify_session_inclusion)
 from repro.trust.slashing import DisputeCourt, StakeBook
 
 __all__ = [
@@ -52,4 +58,6 @@ __all__ = [
     "leaf_digest", "leaf_digest_batch",
     "AuditJob", "OptimisticProtocol", "RollbackRecord", "RoundPhase",
     "RoundState", "TrustConfig", "DisputeCourt", "StakeBook",
+    "SessionLeafRef", "TickCommitment", "commit_tick",
+    "verify_session_inclusion",
 ]

@@ -305,7 +305,10 @@ def test_serving_engine_token_latency_report():
     emitted = int(obs.metrics.value("serve.tokens"))
     assert emitted >= sum(len(v) for v in done.values()) > 0
     assert rep["token_latency"]["count"] == emitted
-    assert rep["tick_s"] >= rep["decode_s"] > 0
+    # a fused macro-step books to prefill_s while any prompt token is
+    # in flight and to decode_s otherwise; short requests may generate
+    # entirely inside prefill chunks, so assert over the pair
+    assert rep["tick_s"] >= rep["prefill_s"] + rep["decode_s"] > 0
     # one latency histogram per served session, observations summing up
     assert set(rep["sessions"]) == {str(r["id"]) for r in reqs}
     assert sum(s["count"] for s in rep["sessions"].values()) == emitted
@@ -314,7 +317,9 @@ def test_serving_engine_token_latency_report():
                                 "ticks"}
     assert obs.metrics.value("edge.cache.hits") \
         == rep["edge"]["cache"]["hits"]
-    # per-tick spans recorded for every engine tick (the final drained
-    # step records a span too, before reporting no work left)
-    ticks = [e for e in obs.trace.events if e["name"] == "tick"]
-    assert len(ticks) >= eng.tick
+    # one "step" span per fused macro-step (each covers C engine ticks;
+    # the final drained step records a span too, before reporting no
+    # work left)
+    steps = [e for e in obs.trace.events if e["name"] == "step"]
+    assert len(steps) >= eng.steps > 0
+    assert eng.tick >= eng.steps

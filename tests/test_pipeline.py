@@ -227,11 +227,17 @@ def _tiny_engine(**kw):
 def test_serving_dependent_revocation(data):
     """A revoked session revokes its co-batched (tick-overlapping)
     in-window neighbours — the serving analogue of the training chain
-    rollback — while non-overlapping batches finalize untouched."""
+    rollback — while non-overlapping batches finalize untouched.
+
+    Batch-synchronous (fixed) scheduling: the pair structure this test
+    asserts — requests (2, 3) sharing no ticks with (0, 1) — only holds
+    when admission waits for the whole batch to drain.  Continuous
+    admission deliberately overlaps them (and chains the revocation
+    further); that is covered in tests/test_serving.py."""
     from repro.data.synthetic import serving_requests
     trust = TrustConfig(audit_rate=1.0, num_verifiers=1,
                         challenge_window=60)
-    eng = _tiny_engine(trust=trust)
+    eng = _tiny_engine(trust=trust, scheduling="fixed")
     reqs = list(serving_requests(eng.cfg.vocab_size, 4, max_prompt=6,
                                  max_new=4, seed=3))
     eng.submit(reqs)

@@ -1,0 +1,304 @@
+"""Continuous-batching scheduler + engine edge cases, and the
+fixed-vs-continuous trust-verdict equivalence contract.
+
+The model-level tests run on the smallest dense config (smollm-360m
+smoke) — scheduling is architecture-agnostic, and the MoE paths are
+exercised by tests/test_substrate.py and tests/test_expert_cache.py.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.scheduler import SlotScheduler, SlotState
+from repro.trust.commitments import MerkleTree
+from repro.trust.protocol import TrustConfig
+from repro.trust.session import commit_tick, verify_session_inclusion
+
+
+def _req(rid, plen, new, vocab=64, seed=None):
+    rng = np.random.default_rng(rid if seed is None else seed)
+    return {"id": rid,
+            "prompt": rng.integers(0, vocab, size=plen).astype(np.int32),
+            "max_new_tokens": new}
+
+
+def _engine(**kw):
+    from repro.configs import get_config
+    from repro.serve.engine import ServingEngine
+    from repro.train.loop import init_model
+    cfg = get_config("smollm-360m", smoke=True)
+    params = init_model(cfg, seed=0)
+    return ServingEngine(cfg, params, batch_slots=2, cache_len=64, **kw)
+
+
+# ----------------------------------------------------------- scheduler
+def test_scheduler_admission_under_full_batch():
+    """A full batch admits nothing; eviction frees exactly one slot and
+    the head of the queue takes it (FIFO) on the next admit."""
+    sched = SlotScheduler(2, policy="continuous")
+    sched.submit([_req(0, 4, 2), _req(1, 4, 2), _req(2, 4, 2),
+                  _req(3, 4, 2)], tick=0)
+    assert len(sched.admit(0)) == 2              # slots filled, 2 queued
+    assert sched.depth() == 2
+    assert sched.admit(1) == []                  # full batch: no admission
+    assert sched.release(0, tick=5) == 0
+    admitted = sched.admit(6)
+    assert [(i, s.request_id) for i, s in admitted] == [(0, 2)]
+    assert sched.meta[2]["admitted_tick"] == 6
+    assert sched.meta[0]["finished_tick"] == 5
+    assert sched.depth() == 1
+    assert sched.occupancy() == 1.0
+
+
+def test_scheduler_fixed_policy_waits_for_drain():
+    """The fixed baseline only refills a fully drained batch."""
+    sched = SlotScheduler(2, policy="fixed")
+    sched.submit([_req(0, 4, 2), _req(1, 4, 2), _req(2, 4, 2)], tick=0)
+    assert len(sched.admit(0)) == 2
+    sched.release(0, tick=3)
+    assert sched.admit(4) == []                  # slot 1 still active
+    sched.release(1, tick=6)
+    assert [s.request_id for _, s in sched.admit(7)] == [2]
+
+
+def test_scheduler_prefill_lengths_caps():
+    """Chunk consumption is capped by chunk size, remaining prompt, and
+    cache headroom — and is 0 for decoding/idle slots."""
+    sched = SlotScheduler(3, policy="continuous")
+    sched.slots[0] = SlotState(request_id=0, pos=0,
+                               prompt=np.zeros(20, np.int32), cursor=0,
+                               to_generate=1)
+    sched.slots[1] = SlotState(request_id=1, pos=6,
+                               prompt=np.zeros(8, np.int32), cursor=6,
+                               to_generate=1)
+    # slot 2 decoding: prompt fully consumed
+    sched.slots[2] = SlotState(request_id=2, pos=4,
+                               prompt=np.zeros(4, np.int32), cursor=4,
+                               to_generate=3)
+    n = sched.prefill_lengths(chunk=16, cache_len=10)
+    assert n.tolist() == [9, 2, 0]     # headroom 9; remaining prompt 2; 0
+
+
+def test_scheduler_rejects_unknown_policy():
+    with pytest.raises(ValueError):
+        SlotScheduler(2, policy="clairvoyant")
+
+
+# ------------------------------------------------------- tick commitments
+def test_commit_tick_inclusion_roundtrip():
+    """One append per tick; every session's leaf proves membership in
+    the tick root, and a rewritten leaf fails its inclusion proof."""
+    leaves = [MerkleTree([f"x{i}"]).root for i in range(3)]
+    tc, refs = commit_tick(7, list(zip([10, 11, 12], leaves)))
+    assert tc.num_leaves == 3 and tc.request_ids == (10, 11, 12)
+    for rid, leaf in zip([10, 11, 12], leaves):
+        assert refs[rid].verify(leaf)
+        assert refs[rid].root == tc.root and refs[rid].tick == 7
+    assert not refs[10].verify(leaves[1])
+    # session-side check: index 1 rewritten post-hoc
+    tampered = [leaves[0], leaves[2], leaves[2]]
+    assert verify_session_inclusion(
+        tampered, [refs[10], refs[11], refs[12]], [0, 1, 2]) == [1]
+
+
+def test_commit_tick_rejects_bad_entries():
+    with pytest.raises(ValueError):
+        commit_tick(0, [])
+    with pytest.raises(ValueError):
+        commit_tick(0, [(1, "a"), (1, "b")])    # one token per stream/tick
+
+
+# ----------------------------------------------------------- the engine
+def test_engine_warmup_compiles_every_bucket_without_state_change():
+    """``warmup()`` visits every pow2 width bucket up to prefill_chunk
+    (just C=1 under the fixed policy) and leaves generation unchanged —
+    a warmed engine produces the same stream as a cold one."""
+    cold = _engine(prefill_chunk=8)
+    warm = _engine(prefill_chunk=8)
+    assert warm.warmup() == 4          # C in {1, 2, 4, 8}
+    assert warm.tick == 0 and warm.steps == 0
+    reqs = [_req(0, 11, 4), _req(1, 3, 4)]
+    assert warm.run() == {} and (warm.submit(reqs) or warm.run()) \
+        == (cold.submit(reqs) or cold.run())
+
+    fixed = _engine(scheduling="fixed")
+    assert fixed.warmup() == 1         # fixed policy only ever runs C=1
+
+
+def test_engine_zero_max_new_tokens():
+    """A zero-token request still runs prefill, finishes with an empty
+    output, and (verified) still seals a one-leaf commitment that
+    finalizes through the normal window."""
+    trust = TrustConfig(audit_rate=1.0, num_verifiers=1, challenge_window=2)
+    eng = _engine(trust=trust)
+    eng.submit([_req(0, 6, 0), _req(1, 6, 3)])
+    done = eng.run()
+    assert done[0] == [] and len(done[1]) == 3
+    rec = eng.records[0]
+    assert rec.finalized and len(rec.leaves) == 1   # boundary token sealed
+    assert any(e["event"] == "commit" and e["request"] == 0
+               for e in eng.session_log)
+
+
+def test_engine_eviction_of_revoked_session_mid_window():
+    """Revoking a session mid-challenge-window: the request never
+    reaches ``completed``, its window entry dies, and its former slot is
+    reused by later requests."""
+    trust = TrustConfig(audit_rate=1.0, num_verifiers=1,
+                        challenge_window=40)
+    eng = _engine(trust=trust)
+    eng.submit([_req(0, 5, 2), _req(1, 5, 2)])
+    while 0 not in eng._done and eng.step():
+        pass
+    assert len(eng._window) >= 1                 # window still open
+    eng.records[0].tokens = [t ^ 1 for t in eng.records[0].tokens]
+    rep = eng.audit_session(0)                   # mid-window audit
+    assert rep["revoked"] and len(eng._window) <= 1
+    eng.submit([_req(2, 5, 2)])                  # reuses the freed slot
+    done = eng.run()
+    assert 0 not in done and 2 in done
+    assert eng.records[0].revoked and not eng.records[0].finalized
+
+
+def test_engine_no_queue_starvation_under_long_prompts():
+    """Chunked prefill + continuous admission: short requests behind a
+    long-prompt request finish in strictly fewer ticks than the
+    batch-synchronous baseline, and the long prompt costs ~len/chunk
+    prefill dispatches instead of len decode ticks."""
+    reqs = [_req(0, 48, 2), _req(1, 4, 2), _req(2, 4, 2), _req(3, 4, 2)]
+
+    def run(scheduling):
+        eng = _engine(scheduling=scheduling, prefill_chunk=16)
+        eng.submit([dict(r, prompt=r["prompt"].copy()) for r in reqs])
+        done = eng.run()
+        return eng, done
+
+    cont_eng, cont_done = run("continuous")
+    fix_eng, fix_done = run("fixed")
+    # identical outputs per request — scheduling must not change tokens
+    assert set(cont_done) == set(fix_done) == {0, 1, 2, 3}
+    for rid in fix_done:
+        assert cont_done[rid] == fix_done[rid], rid
+    # continuous drains the workload in strictly fewer ticks: the long
+    # prompt chunks through in ~len/16 fused dispatches while the short
+    # requests stream through the other slot back-to-back
+    assert cont_eng.tick < fix_eng.tick
+    # and a QUEUED request is admitted the moment a slot frees instead
+    # of waiting for the long prompt's whole batch to drain — its first
+    # token lands dozens of ticks earlier than the fixed baseline's
+    cont_first = cont_eng.request_meta[2]["first_token_tick"]
+    fix_first = fix_eng.request_meta[2]["first_token_tick"]
+    assert cont_first < fix_first
+    # the long prompt costs ceil(48/16)=3 fused dispatches for its
+    # prefill instead of 48 single-token calls: total compiled-call
+    # count stays far below the tick count
+    assert cont_eng.steps < cont_eng.tick
+
+
+def test_engine_batched_tick_commitments():
+    """ONE Merkle append per batch tick (not per stream), leaves in slot
+    order, and per-session inclusion refs verifying against the tick
+    roots."""
+    trust = TrustConfig(audit_rate=1.0, num_verifiers=1, challenge_window=2)
+    eng = _engine(trust=trust)
+    eng.submit([_req(0, 5, 3), _req(1, 5, 3)])
+    done = eng.run()
+    assert set(done) == {0, 1}
+    emitting_ticks = {t for rec in eng.records.values() for t in rec.ticks}
+    assert len(eng.tick_commitments) == len(emitting_ticks)
+    by_tick = {tc.tick: tc for tc in eng.tick_commitments}
+    for rid, rec in eng.records.items():
+        assert len(rec.refs) == len(rec.leaves)
+        for leaf, ref in zip(rec.leaves, rec.refs):
+            assert ref.verify(leaf)
+            assert by_tick[ref.tick].root == ref.root
+            assert rid in by_tick[ref.tick].request_ids
+    # a tick both streams emitted in carries both, slot order
+    both = [tc for tc in eng.tick_commitments if tc.num_leaves == 2]
+    assert both and both[0].request_ids == (0, 1)
+    rep = eng.obs_report()
+    assert rep["commit_appends"] == len(eng.tick_commitments)
+    assert rep["commit_leaves"] == sum(tc.num_leaves
+                                       for tc in eng.tick_commitments)
+
+
+def test_engine_audit_catches_tick_inclusion_break():
+    """A session whose leaf list is consistently rewritten (leaves AND
+    per-session root recomputed) is still caught by the batch tick
+    trees: the committed tick roots can't be rewritten retroactively."""
+    trust = TrustConfig(audit_rate=1.0, num_verifiers=1,
+                        challenge_window=50)
+    eng = _engine(trust=trust)
+    eng.submit([_req(0, 5, 4)])
+    while 0 not in eng._done and eng.step():
+        pass
+    rec = eng.records[0]
+    # consistent rewrite: alter records, re-derive leaves, re-seal
+    rec.tokens = [t ^ 1 for t in rec.tokens]
+    from repro.serve.engine import _tick_leaf
+    rec.leaves = [_tick_leaf(0, t, tok)
+                  for t, tok in zip(rec.ticks, rec.tokens)]
+    rec.seal()
+    rep = eng.audit_session(0)
+    assert rep["revoked"]                        # inclusion proofs fail
+
+
+def test_fixed_vs_continuous_trust_verdict_equivalence():
+    """The trust contract of the rebuild: on the same seeded request
+    trace, continuous scheduling and the fixed baseline produce the
+    same per-request verdict map — every honest request finalizes in
+    both, and tampering the same request revokes it in both."""
+    from repro.data.synthetic import serving_requests
+
+    def run(scheduling, tamper_rid=None):
+        # window wide enough that no session finalizes before the whole
+        # trace is served — the tamper must land in-window in BOTH
+        # schedules (fixed drains its first batch much earlier)
+        trust = TrustConfig(audit_rate=1.0, num_verifiers=1,
+                            challenge_window=120)
+        eng = _engine(trust=trust, scheduling=scheduling)
+        from repro.configs import get_config
+        cfg = get_config("smollm-360m", smoke=True)
+        eng.submit(list(serving_requests(cfg.vocab_size, 5, max_prompt=10,
+                                         max_new=5, seed=11)))
+        while eng._done.keys() != {0, 1, 2, 3, 4} and eng.step():
+            pass
+        if tamper_rid is not None:
+            rec = eng.records[tamper_rid]
+            rec.tokens = [t ^ 1 for t in rec.tokens]
+        done = eng.run()
+        verdicts = {rid: ("revoked" if eng.records[rid].revoked
+                          else "finalized" if rid in done else "open")
+                    for rid in eng.records}
+        return done, verdicts
+
+    cont_done, cont_v = run("continuous")
+    fix_done, fix_v = run("fixed")
+    assert cont_done == fix_done                 # same tokens, greedy
+    assert cont_v == fix_v == {rid: "finalized" for rid in range(5)}
+    # tamper the same session post-run in both schedules: revoked in both
+    _, cont_v2 = run("continuous", tamper_rid=2)
+    _, fix_v2 = run("fixed", tamper_rid=2)
+    assert cont_v2[2] == fix_v2[2] == "revoked"
+    assert all(v != "finalized" for rid, v in cont_v2.items()
+               if rid == 2)
+
+
+def test_engine_continuous_dependent_revocation_chains_through_admission():
+    """Continuous admission deliberately widens the dependent-revocation
+    blast radius: a request admitted into a freed slot shares decode
+    ticks with the still-running stream, so fraud on the long stream
+    voids it too (the fixed-policy pair structure is covered in
+    tests/test_pipeline.py)."""
+    trust = TrustConfig(audit_rate=1.0, num_verifiers=1,
+                        challenge_window=80)
+    eng = _engine(trust=trust)
+    eng.submit([_req(0, 4, 20), _req(1, 4, 2), _req(2, 4, 2)])
+    while eng._done.keys() != {0, 1, 2} and eng.step():
+        pass
+    # request 2 was admitted into request 1's freed slot while 0 ran
+    assert eng.records[2].ticks[0] <= eng.records[0].ticks[-1]
+    eng.records[0].tokens = [t ^ 1 for t in eng.records[0].tokens]
+    rep = eng.audit_session(0)
+    assert rep["revoked"]
+    assert eng.records[1].revoked and eng.records[2].revoked
+    assert eng.run() == {}

@@ -1,0 +1,94 @@
+"""CI link check: every relative link/path reference in the repo's
+markdown must resolve.
+
+Checks, over all tracked ``*.md`` files:
+
+- inline markdown links ``[text](target)`` whose target is not a URL or
+  a pure ``#anchor`` — the file (or directory) must exist relative to
+  the markdown file (targets may carry a ``#fragment``, which is
+  stripped; fragments themselves are not validated);
+- backticked repo paths like ``src/repro/trust/README.md`` — any
+  backticked token that looks like a path (contains ``/``) AND ends in
+  a known source extension must exist relative to the repo root, the
+  markdown file, or ``src/repro/`` (the docs' shorthand convention:
+  ``core/bmoe.py`` means ``src/repro/core/bmoe.py``).  This is what
+  catches stale prose references (e.g. docs pointing at a module that
+  was renamed) that the link syntax check cannot see.
+
+``SNIPPETS.md`` is skipped: it quotes exemplar files from *other*
+repositories verbatim, links and all.
+
+Exit 1 with a ``file:line`` listing on any miss.
+
+Run:  python tools/check_md_links.py  (from the repo root)
+"""
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# backticked repo-relative path with a recognizable source suffix
+CODEPATH = re.compile(
+    r"`([A-Za-z0-9_.\-]+(?:/[A-Za-z0-9_.\-]+)+"
+    r"\.(?:py|md|json|yml|yaml|toml|txt))`")
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+SKIP_FILES = {"SNIPPETS.md"}         # verbatim exemplar content
+# docs shorthand: `trust/protocol.py` means src/repro/trust/protocol.py
+PREFIXES = ("", "src/repro/")
+
+
+def md_files() -> list[Path]:
+    try:
+        out = subprocess.run(["git", "ls-files", "*.md", "**/*.md"],
+                             cwd=ROOT, capture_output=True, text=True,
+                             check=True).stdout.split()
+        if out:
+            return [ROOT / p for p in out]
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        pass
+    return [p for p in ROOT.rglob("*.md")
+            if ".git" not in p.parts and "__pycache__" not in p.parts]
+
+
+def check(path: Path) -> list[str]:
+    errs = []
+    for lineno, line in enumerate(
+            path.read_text(encoding="utf-8").splitlines(), 1):
+        for target in LINK.findall(line):
+            if target.startswith(SKIP_SCHEMES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (path.parent / rel).exists():
+                errs.append(f"{path.relative_to(ROOT)}:{lineno}: "
+                            f"broken link -> {target}")
+        for target in CODEPATH.findall(line):
+            if not any((base / pre / target).exists()
+                       for base in (ROOT, path.parent)
+                       for pre in PREFIXES):
+                errs.append(f"{path.relative_to(ROOT)}:{lineno}: "
+                            f"stale path reference -> {target}")
+    return errs
+
+
+def main() -> int:
+    errors = [e for p in md_files() if p.name not in SKIP_FILES
+              for e in check(p)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    if errors:
+        print(f"[md-links] {len(errors)} broken reference(s)",
+              file=sys.stderr)
+        return 1
+    print(f"[md-links] ok: {len(md_files())} markdown files clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
