@@ -1,0 +1,217 @@
+"""Mesh-executed B-MoE rounds: the CI gate for the device-mesh claim.
+
+Runs the ``framework="optimistic"`` round loop twice on identical
+attacked batches — single-device oracle (``mesh="off"``) vs an 8-edge
+device mesh (``mesh="on"``, forced host devices) where each simulated
+edge owns an ``E/msize`` expert shard, dispatch crosses the mesh via
+all_to_all, each edge hashes only its own buckets into a Merkle subtree
+(round root = reduction over shard roots), and audit recompute runs on
+the owning shard.  Gated claims:
+
+- **bit-identity** — parameter digests, commitment roots, audit
+  verdicts/fraud proofs, rollback count, and inference logits all match
+  the oracle exactly (loss is allclose only: its mean reduces a sharded
+  output in a different order);
+- **dispatch wire bytes independent of E** — the per-device collective
+  bytes of the compiled train step at ``num_experts=16`` stay within
+  ``--wire-ratio`` (default 1.25x) of the ``num_experts=8`` compile:
+  the send buffer is ``~capacity_factor * B * top_k * C`` rows no
+  matter how many experts the bank holds;
+- **shard-local audits** — with ``audit_rate=1.0`` every edge re-executes
+  only its own experts' sampled rows: no shard books more than
+  ``total/msize`` rows plus one capacity bucket of padding slack.
+
+Wall-clock per round is reported, not gated (CPU-interpret timing).
+Writes ``BENCH_mesh.json``; exits non-zero if any gate fails.
+
+NOTE: must run as its own process (``python -m benchmarks.mesh_bench``)
+— the forced-device XLA flag below has to land before jax initializes,
+which is why this suite is not in ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import os
+
+N_DEVICES = 8
+if "jax" not in __import__("sys").modules:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={N_DEVICES}")
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import dataset, row, timed
+from repro.core.attacks import AttackConfig
+from repro.core.bmoe import BMoEConfig, BMoESystem, sparse_capacity
+from repro.core.ledger import digest_tree
+from repro.core.reputation import ReputationConfig
+from repro.launch import hloanalysis
+from repro.trust.commitments import MerkleTree
+from repro.trust.protocol import TrustConfig
+
+TOP_K = 2
+BATCH = 256
+CAPACITY_FACTOR = 1.0
+
+
+def _system(mesh: str, *, num_experts: int = 8,
+            attack=AttackConfig()) -> BMoESystem:
+    cfg = BMoEConfig(
+        framework="optimistic", expert_kind="mlp", num_experts=num_experts,
+        num_edges=num_experts, top_k=TOP_K, dispatch="sparse", mesh=mesh,
+        capacity_factor=CAPACITY_FACTOR, attack=attack, pow_difficulty=2,
+        workload_balance=True,
+        reputation=ReputationConfig(init=0.5, gain=0.01, slash=0.4,
+                                    exclusion_threshold=0.2),
+        trust=TrustConfig(audit_rate=1.0, num_verifiers=2,
+                          challenge_window=2, audit_backend="batched"))
+    return BMoESystem(cfg)
+
+
+def _bit_identity(xtr, ytr, xte, rounds: int):
+    """Train oracle + mesh side by side; return (identity dict, systems,
+    wall-clock per round)."""
+    atk = AttackConfig(malicious_edges=(2,), attack_prob=1.0, noise_std=5.0)
+    systems = {"oracle": _system("off", attack=atk),
+               "mesh": _system("on", attack=atk)}
+    walls = {k: 0.0 for k in systems}
+    rng = np.random.default_rng(0)
+    for idx in [rng.integers(0, len(xtr), BATCH) for _ in range(rounds)]:
+        for name, s in systems.items():
+            with timed(f"mesh.{name}.train") as t:
+                s.train_round(xtr[idx], ytr[idx])
+            walls[name] += t.seconds
+    for s in systems.values():
+        s.flush_trust()
+    a, b = systems["oracle"], systems["mesh"]
+    la, _, _ = a.infer(xte[:BATCH], commit=False)
+    lb, _, _ = b.infer(xte[:BATCH], commit=False)
+    com = b.protocol.rounds[0].commitment
+    identity = {
+        "params": digest_tree(a.experts) == digest_tree(b.experts)
+        and digest_tree(a.gate) == digest_tree(b.gate),
+        "commit_roots": all(
+            a.protocol.rounds[r].commitment.root
+            == b.protocol.rounds[r].commitment.root
+            for r in a.protocol.rounds),
+        "verdicts": all(
+            a.protocol.rounds[r].phase is b.protocol.rounds[r].phase
+            and [(p.leaf_index, p.expert, p.claimed_digest,
+                  p.recomputed_digest) for p in a.protocol.rounds[r].proofs]
+            == [(p.leaf_index, p.expert, p.claimed_digest,
+                 p.recomputed_digest) for p in b.protocol.rounds[r].proofs]
+            for r in a.protocol.rounds),
+        "rollbacks": (a.protocol.stats["rolled_back"]
+                      == b.protocol.stats["rolled_back"] >= 1),
+        "shard_root_reduction": (com.num_shards == b.mesh_shards
+                                 and MerkleTree(com.shard_roots).root
+                                 == com.root),
+        "infer_logits": (np.asarray(la).tobytes()
+                         == np.asarray(lb).tobytes()),
+    }
+    return identity, systems, walls
+
+
+def _wire_bytes(num_experts: int) -> float:
+    """Collective bytes of the compiled mesh train step (same argument
+    construction as BMoESystem.train_round)."""
+    import jax.numpy as jnp
+    s = _system("on", num_experts=num_experts)
+    atk = s.cfg.attack
+    x = np.zeros((BATCH, 28 * 28), np.float32)
+    y = np.zeros((BATCH,), np.int32)
+    rkey = jax.random.fold_in(jax.random.PRNGKey(s.cfg.seed + 17), 0)
+    mask_e = jnp.zeros(s.cfg.num_edges, jnp.float32)
+    gate_bias, active = s._controls()
+    bank = s._resolve_bank(x, gate_bias)
+    txt = s._train_step.lower(
+        s.gate, bank, jnp.asarray(x), jnp.asarray(y), mask_e,
+        jax.random.fold_in(rkey, 1), atk.noise_std,
+        jnp.asarray(atk.colluding), gate_bias, active,
+        jnp.int32(0)).compile().as_text()
+    return float(hloanalysis.analyze(txt)["total_collective_bytes"])
+
+
+def main(rounds: int = 8, json_path: str = "BENCH_mesh.json",
+         wire_ratio: float = 1.25, gate: bool = True):
+    if jax.device_count() < N_DEVICES:
+        raise SystemExit(
+            f"mesh bench needs {N_DEVICES} forced host devices, found "
+            f"{jax.device_count()} — run as 'python -m "
+            f"benchmarks.mesh_bench' in its own process")
+    xtr, ytr, xte, _ = dataset("fmnist")
+    identity, systems, walls = _bit_identity(xtr, ytr, xte, rounds)
+    b = systems["mesh"]
+    msize = b.mesh_shards
+
+    # shard-local audit accounting (counters booked by the recompute)
+    rows_by_shard = {
+        s: b.obs.metrics.value("bmoe.mesh.audit_rows", shard=str(s))
+        for s in range(msize)}
+    total_rows = sum(rows_by_shard.values())
+    cap = sparse_capacity(b.cfg, BATCH)
+    audit_local = (total_rows > 0
+                   and all(r > 0 for r in rows_by_shard.values())
+                   and max(rows_by_shard.values())
+                   <= total_rows / msize + cap)
+
+    wire = {str(n): _wire_bytes(n) for n in (8, 16)}
+    wire_growth = wire["16"] / max(wire["8"], 1e-12)
+
+    result = {
+        "config": {"devices": N_DEVICES, "mesh_shards": msize,
+                   "top_k": TOP_K, "batch": BATCH,
+                   "capacity_factor": CAPACITY_FACTOR, "capacity": cap,
+                   "rounds": rounds, "audit_rate": 1.0},
+        "bit_identical": identity,
+        "train_s_per_round": {k: walls[k] / rounds for k in walls},
+        "mesh_overhead_x": walls["mesh"] / max(walls["oracle"], 1e-12),
+        "audit_rows_by_shard": rows_by_shard,
+        "audit_rows_total": total_rows,
+        "audit_shard_local": audit_local,
+        "collective_bytes_per_step": wire,
+        "wire_growth_8_to_16_experts": wire_growth,
+        "wire_growth_limit": wire_ratio,
+    }
+    with open(json_path, "w") as f:
+        json.dump(result, f, indent=2)
+
+    all_identical = all(identity.values())
+    rows = [
+        row("mesh_train", walls["mesh"] / rounds * 1e6,
+            f"oracle_us={walls['oracle'] / rounds * 1e6:.1f};"
+            f"shards={msize};bit_identical={all_identical}"),
+        row("mesh_claims", 0.0,
+            f"wire_growth={wire_growth:.3f}(limit<={wire_ratio});"
+            f"audit_rows_max={max(rows_by_shard.values()):.0f}"
+            f"_of_{total_rows:.0f};shard_local={audit_local}"),
+    ]
+    if gate:
+        if not all_identical:
+            failed = [k for k, v in identity.items() if not v]
+            raise SystemExit(f"perf gate: mesh execution diverged from the "
+                             f"single-device oracle: {failed}")
+        if wire_growth > wire_ratio:
+            raise SystemExit(
+                f"perf gate: per-device dispatch bytes grew {wire_growth:.2f}x "
+                f"from 8 to 16 experts (limit {wire_ratio}x) — dispatch is "
+                f"no longer independent of the expert count")
+        if not audit_local:
+            raise SystemExit(
+                f"perf gate: audit recompute not shard-local: "
+                f"{rows_by_shard} (total {total_rows}, {msize} shards)")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--json", default="BENCH_mesh.json")
+    ap.add_argument("--wire-ratio", type=float, default=1.25)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(args.rounds, args.json, args.wire_ratio)

@@ -37,6 +37,7 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core import experts as ex
 from repro.core.attacks import AttackConfig, round_attack_mask, poison_tree
@@ -49,6 +50,7 @@ from repro.storage import (ExpertCache, ExpertStore, GateEMA,
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.models.moe import capacity_positions
+from repro.models.moe_ep import _shard_map
 from repro.trust.audit import pack_audit_batch, pack_audit_batch_multi
 from repro.trust.commitments import chunk_bounds
 from repro.trust.da import DataAvailabilityAuditor
@@ -79,6 +81,18 @@ class BMoEConfig:
     capacity_factor: float = 1.25   # bucket slots per expert, as a
     #                                 multiple of the balanced share
     #                                 B*top_k/num_experts (overflow drops)
+    # device-mesh execution (the distributed edge network made real):
+    # "on" runs every round's jitted step under an edge mesh
+    # (launch.mesh.make_edge_mesh) — the expert bank is sharded so each
+    # simulated edge device owns an E/msize slice, sparse dispatch
+    # crosses shards via all_to_all (wire bytes per device independent
+    # of E), and the trust layer goes shard-local: each edge hashes only
+    # its own buckets (root = Merkle reduction over shard roots) and
+    # audit recompute runs on the owning shard.  Outputs, commitments,
+    # audit verdicts, and rollback replays are BIT-IDENTICAL to the
+    # "off" single-device oracle (tests/test_mesh_bmoe.py).
+    mesh: str = "off"               # on | off
+    mesh_shards: Optional[int] = None  # edge devices (None: widest fit)
     attack: AttackConfig = dataclasses.field(default_factory=AttackConfig)
     pow_difficulty: int = 8
     num_chain_nodes: int = 8
@@ -139,6 +153,30 @@ class BMoESystem:
             cfg.expert_kind, cfg.num_experts, ke, in_dim=cfg.in_dim,
             in_ch=cfg.in_ch, out=cfg.num_classes)
         self._apply_grouped = ex.grouped_apply_fn(cfg.expert_kind)
+        # mesh execution (see BMoEConfig.mesh): shard the expert bank
+        # over the edge mesh's model axis so each simulated edge device
+        # owns a contiguous E/msize expert slice; the jitted steps then
+        # run the all_to_all dispatch path (_mesh_sparse_forward)
+        self.device_mesh = None
+        self.mesh_shards = 1
+        self._bank_sharding = None
+        if cfg.mesh == "on":
+            if cfg.dispatch != "sparse":
+                raise ValueError(
+                    "mesh='on' runs the all_to_all sparse dispatch; dense "
+                    "dispatch has no per-expert buckets to exchange — set "
+                    "dispatch='sparse'")
+            from jax.sharding import PartitionSpec
+            from repro.launch.mesh import make_edge_mesh
+            from repro.sharding import Sharder
+            self.device_mesh = make_edge_mesh(cfg.num_experts,
+                                              shards=cfg.mesh_shards)
+            axes = dict(zip(self.device_mesh.axis_names,
+                            self.device_mesh.devices.shape))
+            self.mesh_shards = axes["model"]
+            sharder = Sharder(self.device_mesh, rules={"experts": "model"})
+            self._bank_sharding = sharder.named(PartitionSpec("model"))
+            self.experts = jax.device_put(self.experts, self._bank_sharding)
         self.ledger = Ledger()
         self.storage = StorageNetwork(
             num_nodes=cfg.num_storage_nodes,
@@ -251,12 +289,29 @@ class BMoESystem:
                     p = jax.tree_util.tree_map(lambda a: a[gid], bank)
                     return jax.vmap(self._apply_one)(p, xd[idx])
                 self._batched_recompute_call = jax.jit(_gather_apply)
+        if self.mesh_shards > 1 and self.trust_cfg is not None:
+            # shard-local commitments reduce shard subtree roots into the
+            # flat round root; the reduction is bit-identical only when
+            # each shard's subtree is a complete subtree of the flat
+            # tree, i.e. leaves per shard is a power of two
+            lps = (cfg.num_experts // self.mesh_shards) \
+                * self.trust_cfg.chunks_per_expert
+            if lps & (lps - 1):
+                raise ValueError(
+                    f"shard-local commitments need a power-of-two leaf "
+                    f"count per edge: (num_experts/mesh_shards) * "
+                    f"chunks_per_expert = ({cfg.num_experts}/"
+                    f"{self.mesh_shards}) * "
+                    f"{self.trust_cfg.chunks_per_expert} = {lps}; adjust "
+                    f"mesh_shards or TrustConfig.chunks_per_expert")
         self._train_step = jax.jit(functools.partial(
             _train_step, cfg=cfg, apply_all=self._apply_all,
-            apply_grouped=self._apply_grouped))
+            apply_grouped=self._apply_grouped, mesh=self.device_mesh,
+            mesh_shards=self.mesh_shards))
         self._infer_step = jax.jit(functools.partial(
             _infer_step, cfg=cfg, apply_all=self._apply_all,
-            apply_grouped=self._apply_grouped))
+            apply_grouped=self._apply_grouped, mesh=self.device_mesh,
+            mesh_shards=self.mesh_shards))
         # host-side routing re-derivation for sparse commitments: the
         # committed routing indices are what let auditors re-build the
         # exact capacity buckets the executor filled
@@ -621,9 +676,13 @@ class BMoESystem:
             self.expert_store.manifest_cid(self._object_id(e), version)
             for e in range(cfg.num_experts))
         if key != self._resolved_key:
-            # host-side stack first, ONE device put per leaf
+            # host-side stack first, ONE device put per leaf — straight
+            # into the edge-shard layout under mesh execution
+            put = (functools.partial(jax.device_put,
+                                     device=self._bank_sharding)
+                   if self._bank_sharding is not None else jnp.asarray)
             self._resolved_bank = jax.tree_util.tree_map(
-                lambda *ls: jnp.asarray(np.stack(ls)), *rows)
+                lambda *ls: put(np.stack(ls)), *rows)
             self._resolved_key = key
         return self._resolved_bank
 
@@ -760,6 +819,33 @@ class BMoESystem:
         if cfg.expert_kind == "mlp" and self.protocol is not None:
             slices = [slice(bounds[c], bounds[c + 1])
                       for c in range(n_chunks)]
+            if self.mesh_shards > 1:
+                # shard-local commitment building: each edge recomputes
+                # (and will hash) only its own expert buckets — one
+                # grouped call per edge over its local (E_l, capacity, C)
+                # slice.  Per-sample arithmetic is identical to the
+                # single-call path, so the assembled tensor (and every
+                # leaf digest) is bitwise the oracle's.
+                e_l = cfg.num_experts // self.mesh_shards
+                xd = jnp.asarray(xpad)
+                work = [(e, sl) for e in range(e_l) for sl in slices]
+                parts = []
+                for s in range(self.mesh_shards):
+                    bank_s = jax.tree_util.tree_map(
+                        lambda a: a[s * e_l:(s + 1) * e_l], experts)
+                    rmap = (None if row_index is None
+                            else row_index[s * e_l:(s + 1) * e_l])
+                    idx, gid, n = pack_audit_batch(
+                        [e for e, _ in work], [sl for _, sl in work],
+                        row_map=rmap)
+                    out = np.asarray(self._batched_recompute_call(
+                        bank_s, xd, jnp.asarray(idx),
+                        jnp.asarray(gid)))[:n]
+                    parts.extend(np.concatenate(
+                        [out[e * n_chunks + c][:bounds[c + 1] - bounds[c]]
+                         for c in range(n_chunks)], axis=0)
+                        for e in range(e_l))
+                return np.stack(parts)
             work = [(e, sl) for e in range(cfg.num_experts)
                     for sl in slices]            # (e, c) row-major = leaf order
             idx, gid, n = pack_audit_batch([e for e, _ in work],
@@ -850,6 +936,10 @@ class BMoESystem:
                 fetch(e)
             if not xd_cache:
                 xd_cache.append(jnp.asarray(self._pad_task(xin, row_index)))
+            if self.mesh_shards > 1:
+                return self._sharded_batch_recompute(experts, xd_cache[0],
+                                                     expert_ids, slices,
+                                                     row_index)
             idx, gid, n = pack_audit_batch(expert_ids, slices,
                                            row_map=row_index)
             out = self._batched_recompute_call(experts, xd_cache[0],
@@ -858,6 +948,54 @@ class BMoESystem:
             return np.asarray(out[:n])
 
         return batch_recompute
+
+    def _shard_groups(self, expert_ids):
+        """Sample indices grouped by the edge shard owning each sampled
+        expert — mesh execution routes every audit recompute to the
+        shard that holds the expert slice."""
+        e_l = self.cfg.num_experts // self.mesh_shards
+        groups: Dict[int, List[int]] = {}
+        for i, e in enumerate(expert_ids):
+            groups.setdefault(int(e) // e_l, []).append(i)
+        return e_l, groups
+
+    def _book_audit_rows(self, shard: int, slices, sel) -> None:
+        """Per-shard real recompute rows (padding excluded) — the bench
+        gate that shard-local audits cost each edge ~1/msize of the
+        round's audited rows (benchmarks/mesh_bench.py)."""
+        rows = int(sum(slices[i].stop - slices[i].start for i in sel))
+        self.obs.metrics.counter("bmoe.mesh.audit_rows",
+                                 shard=str(shard)).add(rows)
+
+    def _sharded_batch_recompute(self, experts, xd, expert_ids, slices,
+                                 row_index):
+        """Shard-local audit recompute: each sampled leaf runs as part of
+        the owning edge's grouped call over its local bank slice (local
+        expert ids, shard-sliced routing).  Per-sample arithmetic is
+        independent of the grouping, so the reassembled ``(S, Cmax, C)``
+        tensor is bitwise the single-call path's — verdicts, fraud
+        proofs, and attestations are unchanged."""
+        e_l, groups = self._shard_groups(expert_ids)
+        cmax = max(sl.stop - sl.start for sl in slices)
+        out = None
+        for s, sel in sorted(groups.items()):
+            bank_s = jax.tree_util.tree_map(
+                lambda a: a[s * e_l:(s + 1) * e_l], experts)
+            rmap = (None if row_index is None
+                    else row_index[s * e_l:(s + 1) * e_l])
+            idx, gid, n = pack_audit_batch(
+                [int(expert_ids[i]) - s * e_l for i in sel],
+                [slices[i] for i in sel], row_map=rmap)
+            part = np.asarray(self._batched_recompute_call(
+                bank_s, xd, jnp.asarray(idx), jnp.asarray(gid)))[:n]
+            if out is None:
+                out = np.zeros((len(expert_ids), cmax) + part.shape[2:],
+                               part.dtype)
+            w = min(part.shape[1], cmax)
+            for j, i in enumerate(sel):
+                out[i, :w] = part[j, :w]
+            self._book_audit_rows(s, slices, sel)
+        return out
 
     def _commit_round(self, protocol, rid, executor, honest, attacked, atk,
                       seed_salt, task_digest, row_index=None):
@@ -871,7 +1009,8 @@ class BMoESystem:
             claimed = honest + atk.noise_std * rng.standard_normal(
                 honest.shape).astype(honest.dtype)
         return protocol.commit(rid, executor, claimed,
-                               task_digest=task_digest, row_index=row_index)
+                               task_digest=task_digest, row_index=row_index,
+                               num_shards=self.mesh_shards)
 
     def _commitment_layout(self, gate, x, batch: int, gate_bias):
         """(row_index, bounds) of the round's commitment: bucket-chunk
@@ -952,6 +1091,8 @@ class BMoESystem:
             for k, e in sorted({(int(k), int(e))
                                 for k, e in zip(slot_ids, experts)}):
                 fetch(k, e)
+            if self.mesh_shards > 1:
+                return sharded_multi(slot_ids, experts, slices)
             # merged drains carry more (and more variable) samples than a
             # per-round audit: bucket to the next power of two so the
             # grouped call settles on O(1) compiled shapes
@@ -966,6 +1107,45 @@ class BMoESystem:
                                                jnp.asarray(idx),
                                                jnp.asarray(gid))
             return np.asarray(out[:n])
+
+        def sharded_multi(slot_ids, experts, slices):
+            # the merged drain under mesh execution: every sampled leaf
+            # still recomputes on the edge shard owning its expert — the
+            # stacked (slots*N) bank restacks per shard to (slots*E_l)
+            # with local expert ids and shard-sliced routing, and the
+            # outputs reassemble into the one (S, Cmax, C) tensor
+            # audit_rounds hashes (bitwise the unsharded call's rows)
+            e_l, groups = self._shard_groups(experts)
+            cmax = max(sl.stop - sl.start for sl in slices)
+            out = None
+            for s, sel in sorted(groups.items()):
+                bank_s = jax.tree_util.tree_map(
+                    lambda a: a.reshape((slots, cfg.num_experts)
+                                        + a.shape[1:])
+                    [:, s * e_l:(s + 1) * e_l]
+                    .reshape((slots * e_l,) + a.shape[1:]),
+                    stacked_bank)
+                rmaps_s = [None if rm is None
+                           else rm[s * e_l:(s + 1) * e_l]
+                           for rm in row_maps]
+                bucket = 8
+                while bucket < len(sel):
+                    bucket *= 2
+                idx, gid, n = pack_audit_batch_multi(
+                    [slot_ids[i] for i in sel],
+                    [int(experts[i]) - s * e_l for i in sel],
+                    [slices[i] for i in sel], row_off, e_l,
+                    bucket=bucket, row_maps=rmaps_s)
+                part = np.asarray(self._batched_recompute_call(
+                    bank_s, xcat, jnp.asarray(idx), jnp.asarray(gid)))[:n]
+                if out is None:
+                    out = np.zeros((len(experts), cmax) + part.shape[2:],
+                                   part.dtype)
+                w = min(part.shape[1], cmax)
+                for j, i in enumerate(sel):
+                    out[i, :w] = part[j, :w]
+                self._book_audit_rows(s, slices, sel)
+            return out
 
         return protocol.verifiers.audit_rounds(coms, multi_fn)
 
@@ -1414,42 +1594,79 @@ def _route_for_commit(gate, x, gate_bias, *, cfg):
 
 
 def _trust_outputs(outs, mask_e, key, noise_std, colluding, cfg, active,
-                   executor):
+                   executor, shard=None):
     """Framework-specific corruption + consensus over the per-expert
     output buffer ``outs`` (N, R, ...) — R is the full batch under dense
     dispatch, the capacity bucket under sparse (the vote and the attack
-    surface shrink with the compute)."""
+    surface shrink with the compute).
+
+    ``shard=(sid, E_l)`` marks mesh execution: ``outs`` is edge ``sid``'s
+    local expert slice ``(E_l, R, ...)``.  Corruption noise is then drawn
+    at the full ``(N, R, ...)`` shape and sliced to the local experts —
+    the counter-based PRNG makes every edge's corrupted bytes bitwise
+    the single-device oracle's — and the consensus vote runs over the
+    local experts only (the vote is per-expert independent, so local
+    verdicts concatenate to exactly the global ones)."""
+    n_local = outs.shape[0]
+    full_shape = (cfg.num_experts,) + outs.shape[1:]
+
+    def local(a):
+        # barrier first: fusing the threefry/erfinv noise computation
+        # into the corruption mul-add chain lets XLA contract the ops
+        # shape-dependently (observed: last-ulp drift between the
+        # (E_l, ...) mesh slice and the (N, ...) oracle); materializing
+        # the full-shape draw makes the remaining slice + elementwise
+        # chain bit-stable.  The draw is never differentiated (constant
+        # w.r.t. params), so the missing optimization_barrier vjp rule
+        # is moot.
+        a = jax.lax.optimization_barrier(a)
+        if shard is None:
+            return a
+        return jax.lax.dynamic_slice_in_dim(a, shard[0] * shard[1],
+                                            shard[1], axis=0)
+
     if cfg.framework == "optimistic":
         # single-executor optimistic path: the round's result is whatever
         # the rotating executor published (corrupted iff it attacks);
         # verification happens off the jitted path (commit/audit/court)
         exec_flag = mask_e[executor]
-        noise = jax.random.normal(key, outs.shape, outs.dtype)
+        noise = local(jax.random.normal(key, full_shape, outs.dtype))
         trusted = outs + noise_std * noise * exec_flag
-        support = jnp.full((cfg.num_experts,), 1.0)
-        flags = jnp.ones((cfg.num_experts, cfg.num_edges), jnp.int32)
+        support = jnp.full((n_local,), 1.0)
+        flags = jnp.ones((n_local, cfg.num_edges), jnp.int32)
     elif cfg.framework == "traditional":
         # edge i employs expert i: manipulation hits expert i directly
-        from repro.core.attacks import manipulate_single
+        # (the sliced form below is manipulate_single restricted to the
+        # local experts — same noise draw, same mask rows)
         mask_n = mask_e[:cfg.num_experts]
-        trusted = manipulate_single(outs, mask_n, noise_std, key)
-        support = jnp.full((cfg.num_experts,), 1.0)
-        flags = jnp.ones((cfg.num_experts, cfg.num_edges), jnp.int32)
+        noise = local(jax.random.normal(key, full_shape, outs.dtype))
+        m = local(mask_n).reshape((n_local,) + (1,) * (outs.ndim - 1))
+        trusted = outs + noise_std * noise * m
+        support = jnp.full((n_local,), 1.0)
+        flags = jnp.ones((n_local, cfg.num_edges), jnp.int32)
     else:
         # redundancy: every edge publishes every expert's result.  Each
         # edge's manipulated copy draws from its own folded key (the
         # colluding coalition folds a shared id, publishing identical
         # results), so only the (N, M, ...) publication tensor the vote
         # needs is materialized — not separate colluding + independent
-        # noise tensors plus a full-size select.
-        def edge_copy(m):
+        # noise tensors plus a full-size select.  The draw is vmapped
+        # bare (optimization_barrier has no batching rule) and the
+        # stacked tensor barriered before the slice + corruption
+        # arithmetic — see ``local`` on why the barrier matters.
+        def edge_noise(m):
             fid = jnp.where(colluding, 0, m)
-            noise = jax.random.normal(jax.random.fold_in(key, fid),
-                                      outs.shape, outs.dtype)
-            return outs + noise_std * noise * mask_e[m]
+            return jax.random.normal(jax.random.fold_in(key, fid),
+                                     full_shape, outs.dtype)
 
-        pub = jnp.moveaxis(jax.vmap(edge_copy)(jnp.arange(cfg.num_edges)),
-                           0, 1)                         # (N, M, ...)
+        noise = jax.vmap(edge_noise)(jnp.arange(cfg.num_edges))
+        noise = jax.lax.optimization_barrier(noise)      # (M, N, ...)
+        if shard is not None:
+            noise = jax.lax.dynamic_slice_in_dim(
+                noise, shard[0] * shard[1], shard[1], axis=1)
+        mshape = (1, cfg.num_edges) + (1,) * (outs.ndim - 1)
+        pub = outs[:, None] + noise_std * jnp.moveaxis(noise, 0, 1) \
+            * mask_e.reshape(mshape)                     # (N|E_l, M, ...)
         # Step 3: distributed consensus = majority vote over the M copies
         # (reputation-excluded edges barred from electorate, §VI-D)
         act = active if active is not None else jnp.ones(cfg.num_edges)
@@ -1457,12 +1674,166 @@ def _trust_outputs(outs, mask_e, key, noise_std, colluding, cfg, active,
     return trusted, support, flags
 
 
+@jax.custom_vjp
+def _grad_barrier(x):
+    """Identity whose cotangent passes through an optimization barrier.
+
+    Without it XLA fuses the ownership-mask reduction from the return
+    all_to_all's transpose with the bias-gradient capacity reduce inside
+    the expert vjp, summing the per-slot cotangents over (msize, cap)
+    jointly — a different float association order than the oracle's
+    plain cap reduce (observed: last-ulp drift on the experts' output
+    bias after one SGD step, every other gradient bitwise equal).
+    Materializing the cotangent here restores the oracle's reduction
+    shape, and with it bit-identical parameter updates."""
+    return x
+
+
+def _grad_barrier_fwd(x):
+    return x, None
+
+
+def _grad_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_grad_barrier.defvjp(_grad_barrier_fwd, _grad_barrier_bwd)
+
+
+def _mesh_sparse_forward(experts, xin, topi, weights, capacity, mask_e, key,
+                         noise_std, colluding, cfg, apply_grouped, active,
+                         executor, mesh, msize):
+    """Sparse dispatch across the edge mesh (BMoEConfig.mesh="on").
+
+    Routing runs globally on the replicated gate — the identical ops the
+    single-device oracle runs.  Each edge shard then scatters only its
+    own token slice into a full-shape send buffer at the GLOBAL bucket
+    positions, and the buffers cross the mesh via all_to_all; summing
+    the per-shard partials is exact (every bucket slot has at most one
+    nonzero contributor — its unique token — and 0+x is exact), so the
+    local ``(E_l, capacity, C)`` buffers each edge computes its experts
+    on are bitwise the oracle's bucket slices.  Per-device dispatch wire
+    bytes are ~num_experts*capacity*C ~ capacity_factor*B*top_k*C —
+    independent of the expert count (gated in benchmarks/mesh_bench.py).
+
+    Trust corruption draws noise at the full ``(N, ...)`` shape and
+    slices the local experts (see ``_trust_outputs``), so each edge's
+    attacked bytes are bitwise the oracle's too.  The return all_to_all
+    hands every token's combine rows back to the shard owning the token
+    via the ``slot_src`` ownership map (derived from the replicated
+    routing, so it needs no communication).
+
+    Every non-bank input enters the shard_map REPLICATED and is sliced
+    inside the body: the transpose then psums per-shard cotangents that
+    are exact zeros outside each shard's slice, keeping the backward
+    pass — and hence every parameter update — bit-identical to the
+    oracle as well.  (The scalar *loss* is the one quantity allowed to
+    differ in final ulps: its mean over the sharded output reduces in a
+    different order.)"""
+    N, k = cfg.num_experts, cfg.top_k
+    E_l = N // msize
+    B = xin.shape[0]
+    B_l = -(-B // msize)
+    B_pad = B_l * msize
+    tail = xin.shape[1:]
+
+    eid = topi.reshape(-1)                              # (B*k,) row-major
+    pos, keep, _ = capacity_positions(eid[None], N, capacity)
+    pos, keep = pos[0], keep[0]
+    posc = jnp.where(keep, pos, capacity - 1)
+    dropped = (B * k) - keep.sum().astype(jnp.float32)
+    wk = jnp.take_along_axis(weights, topi, axis=1).reshape(-1)
+    wk = wk * keep.astype(wk.dtype)
+
+    # which token shard owns each filled bucket slot (-1: empty slot) —
+    # token b lives on shard b // B_l, matching the slices below
+    towner = jnp.repeat(jnp.arange(B, dtype=jnp.int32) // B_l, k)
+    slot_src = jnp.full((N, capacity), -1, jnp.int32).at[eid, posc].max(
+        jnp.where(keep, towner, -1), mode="drop")
+
+    def padtok(a, fill):                                # (B*k,) -> (B_pad*k,)
+        if B_pad == B:
+            return a
+        pad = jnp.full(((B_pad - B) * k,) + a.shape[1:], fill, a.dtype)
+        return jnp.concatenate([a, pad], axis=0)
+
+    xin_p = xin if B_pad == B else jnp.concatenate(
+        [xin, jnp.zeros((B_pad - B,) + tail, xin.dtype)], axis=0)
+    eid_p = padtok(eid, N)          # sentinel expert: dropped by the scatter
+    posc_p = padtok(posc, capacity - 1)
+    keep_p = padtok(keep, False)
+    wk_p = padtok(wk, 0)
+
+    def body(xr, eidr, posr, keepr, wkr, bank_l, src, mask_er, keyr,
+             stdr, collr, activer, execr):
+        sid = jax.lax.axis_index("model")
+        lo = sid * B_l * k
+        eidl = jax.lax.dynamic_slice_in_dim(eidr, lo, B_l * k)
+        posl = jax.lax.dynamic_slice_in_dim(posr, lo, B_l * k)
+        keepl = jax.lax.dynamic_slice_in_dim(keepr, lo, B_l * k)
+        wkl = jax.lax.dynamic_slice_in_dim(wkr, lo, B_l * k)
+        xl = jax.lax.dynamic_slice_in_dim(xr, sid * B_l, B_l)
+
+        # scatter own tokens into the full-shape buffer at their GLOBAL
+        # bucket positions, exchange, and sum the per-shard partials
+        kshape = (B_l * k,) + (1,) * len(tail)
+        gath = jnp.repeat(xl, k, axis=0) \
+            * keepl.reshape(kshape).astype(xl.dtype)
+        send = jnp.zeros((N, capacity) + tail, xl.dtype).at[
+            eidl, posl].add(gath, mode="drop")
+        recv = jax.lax.all_to_all(send.reshape((msize, E_l, capacity)
+                                               + tail),
+                                  "model", split_axis=0, concat_axis=0,
+                                  tiled=False)
+        buf_l = recv.sum(axis=0)                    # (E_l, capacity, *tail)
+
+        outs_l = apply_grouped(bank_l, buf_l)       # (E_l, capacity, C)
+        outs_l = _grad_barrier(outs_l)
+        trusted_l, support_l, flags_l = _trust_outputs(
+            outs_l, mask_er, keyr, stdr, collr, cfg, activer, execr,
+            shard=(sid, E_l))
+
+        # return exchange: each trusted row goes back to the shard that
+        # owns its token (ownership-masked so the sum at the receiver
+        # again has at most one nonzero contributor per slot)
+        src_l = jax.lax.dynamic_slice_in_dim(src, sid * E_l, E_l, axis=0)
+        own = src_l[None] == jnp.arange(msize, dtype=jnp.int32)[:, None,
+                                                                None]
+        back = jnp.where(
+            own.reshape((msize, E_l, capacity)
+                        + (1,) * (trusted_l.ndim - 2)),
+            trusted_l[None], jnp.zeros((), trusted_l.dtype))
+        ret = jax.lax.all_to_all(back, "model", split_axis=0,
+                                 concat_axis=0, tiled=False)
+        ret = ret.reshape((N, capacity) + trusted_l.shape[2:])
+
+        yk = ret.at[eidl, posl].get(mode="fill", fill_value=0) \
+            * wkl[:, None]
+        y_l = yk.reshape((B_l, k) + yk.shape[1:]).sum(axis=1)
+        return y_l, support_l, flags_l
+
+    rep = P()
+    bank_specs = jax.tree_util.tree_map(lambda _: P("model"), experts)
+    mapped = _shard_map(
+        body, mesh,
+        in_specs=(rep, rep, rep, rep, rep, bank_specs, rep, rep, rep,
+                  rep, rep, rep, rep),
+        out_specs=(P("model"), P("model"), P("model")))
+    act = active if active is not None else jnp.ones(cfg.num_edges)
+    y, support, flags = mapped(
+        xin_p, eid_p, posc_p, keep_p, wk_p, experts, slot_src, mask_e,
+        key, jnp.asarray(noise_std, jnp.float32), jnp.asarray(colluding),
+        act, jnp.asarray(executor, jnp.int32))
+    return y[:B], support, flags, dropped
+
+
 def _moe_forward(gate, experts, x, mask_e, key, noise_std, colluding, cfg,
                  apply_all, apply_grouped, gate_bias=None, active=None,
-                 executor=0):
+                 executor=0, mesh=None, mesh_shards=1):
     """Shared forward: returns (trusted_out (B,C), weights (B,N),
     activation (N,), support (N,), flags (N,M), logits (B,N),
-    dropped ())."""
+    dropped ()).  With ``mesh`` the sparse path runs sharded over the
+    edge mesh (``_mesh_sparse_forward``) — bit-identical outputs."""
     flat = _flatten_for_gate(x)
     xin = x if cfg.expert_kind == "cnn" else flat
     logits = ex.gate_apply(gate, flat)
@@ -1472,26 +1843,34 @@ def _moe_forward(gate, experts, x, mask_e, key, noise_std, colluding, cfg,
     B = xin.shape[0]
 
     if cfg.dispatch == "sparse":
-        # top-k scatter-dispatch: only routed tokens reach an expert
         capacity = sparse_capacity(cfg, B)
-        buf, eid, posc, keep = _sparse_dispatch(xin, topi, cfg, capacity)
-        outs = apply_grouped(experts, buf)              # (N, cap, C)
-        dropped = (B * cfg.top_k) - keep.sum().astype(jnp.float32)
+        if mesh is not None:
+            y, support, flags, dropped = _mesh_sparse_forward(
+                experts, xin, topi, weights, capacity, mask_e, key,
+                noise_std, colluding, cfg, apply_grouped, active,
+                executor, mesh, mesh_shards)
+        else:
+            # top-k scatter-dispatch: only routed tokens reach an expert
+            buf, eid, posc, keep = _sparse_dispatch(xin, topi, cfg,
+                                                    capacity)
+            outs = apply_grouped(experts, buf)          # (N, cap, C)
+            dropped = (B * cfg.top_k) - keep.sum().astype(jnp.float32)
+            trusted, support, flags = _trust_outputs(
+                outs, mask_e, key, noise_std, colluding, cfg, active,
+                executor)
+            # aggregate with gate weights (paper: weighted sum over top-K)
+            yk = trusted[eid, posc]                     # (B*k, C)
+            wk = jnp.take_along_axis(weights, topi, axis=1).reshape(-1)
+            wk = wk * keep.astype(wk.dtype)             # drops contribute 0
+            y = (yk * wk[:, None]).reshape(B, cfg.top_k, -1).sum(axis=1)
     else:
+        if mesh is not None:
+            raise ValueError("mesh execution requires dispatch='sparse'")
         outs = apply_all(experts, xin)                  # (N, B, C)
         dropped = jnp.zeros((), jnp.float32)
-
-    trusted, support, flags = _trust_outputs(outs, mask_e, key, noise_std,
-                                             colluding, cfg, active,
-                                             executor)
-
-    # aggregate with gate weights (paper: weighted sum over top-K)
-    if cfg.dispatch == "sparse":
-        yk = trusted[eid, posc]                         # (B*k, C)
-        wk = jnp.take_along_axis(weights, topi, axis=1).reshape(-1)
-        wk = wk * keep.astype(wk.dtype)                 # drops contribute 0
-        y = (yk * wk[:, None]).reshape(B, cfg.top_k, -1).sum(axis=1)
-    else:
+        trusted, support, flags = _trust_outputs(outs, mask_e, key,
+                                                 noise_std, colluding,
+                                                 cfg, active, executor)
         y = jnp.einsum("bn,nbc->bc", weights, trusted)
     activation = (weights > 0).sum(axis=0).astype(jnp.float32)
     return y, weights, activation, support, flags, logits, dropped
@@ -1499,22 +1878,36 @@ def _moe_forward(gate, experts, x, mask_e, key, noise_std, colluding, cfg,
 
 def _train_step(gate, experts, x, y, mask_e, key, noise_std, colluding,
                 gate_bias, active, executor, *, cfg, apply_all,
-                apply_grouped):
+                apply_grouped, mesh=None, mesh_shards=1):
     def loss_fn(params):
         gate_p, experts_p = params
         out, w, activation, support, flags, _, dropped = _moe_forward(
             gate_p, experts_p, x, mask_e, key, noise_std, colluding, cfg,
-            apply_all, apply_grouped, gate_bias, active, executor)
+            apply_all, apply_grouped, gate_bias, active, executor,
+            mesh, mesh_shards)
         logp = jax.nn.log_softmax(out, axis=-1)
         loss = -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
         return loss, (activation, support, flags, dropped)
 
     (loss, (activation, support, flags, dropped)), grads = \
         jax.value_and_grad(loss_fn, has_aux=True)((gate, experts))
+    grads_e = grads[1]
+    if mesh is not None:
+        # keep bank grads (and therefore the updated bank) on the edge
+        # mesh: without the constraint XLA materializes the replicated
+        # grad as zero-padded shards + an all-reduce that scales with
+        # the bank size, re-coupling wire bytes to the expert count.
+        # Each element has exactly one contributing shard, so the
+        # shard-local update is bitwise the same bank.
+        bank_spec = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec("model"))
+        grads_e = jax.tree_util.tree_map(
+            lambda g: jax.lax.with_sharding_constraint(g, bank_spec),
+            grads_e)
     new_gate = jax.tree_util.tree_map(lambda p, g: p - cfg.lr * g, gate,
                                       grads[0])
     new_experts = jax.tree_util.tree_map(lambda p, g: p - cfg.lr * g,
-                                         experts, grads[1])
+                                         experts, grads_e)
     metrics = {"loss": loss, "activation": activation, "support": support,
                "flags": flags, "dropped": dropped}
     return new_gate, new_experts, metrics
@@ -1522,8 +1915,8 @@ def _train_step(gate, experts, x, y, mask_e, key, noise_std, colluding,
 
 def _infer_step(gate, experts, x, mask_e, key, noise_std, colluding,
                 gate_bias, active, executor, *, cfg, apply_all,
-                apply_grouped):
+                apply_grouped, mesh=None, mesh_shards=1):
     out, w, activation, support, flags, _, _ = _moe_forward(
         gate, experts, x, mask_e, key, noise_std, colluding, cfg, apply_all,
-        apply_grouped, gate_bias, active, executor)
+        apply_grouped, gate_bias, active, executor, mesh, mesh_shards)
     return out, activation, support

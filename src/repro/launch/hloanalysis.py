@@ -31,6 +31,26 @@ _COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
 _CALL_ATTR = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
 _CONST_RE = re.compile(r"constant\((\d+)\)")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _replica_group_size(rhs: str) -> Optional[int]:
+    """Largest replica group of a collective, or None if unspecified.
+
+    A collective whose groups are all singletons (``{{0},{1},...}`` or
+    iota ``[N,1]<=[N]``) exchanges nothing — XLA leaves it in place when
+    every partition reduces only with itself (e.g. an explicitly
+    shard-constrained gradient), and it must not count as wire bytes.
+    """
+    m = _GROUPS_IOTA_RE.search(rhs)
+    if m:  # [n_groups, group_size]<=[...]
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(rhs)
+    if m:
+        return max(len([d for d in g.split(",") if d.strip()])
+                   for g in m.group(1)[1:-1].split("},{"))
+    return None
 
 
 def _dims(dims: str) -> List[int]:
@@ -106,9 +126,13 @@ def parse_hlo(text: str) -> Dict[str, Computation]:
         flops = 0.0
         instr = Instr(base, out_bytes, flops, calls, is_while, cond, trip)
         if base in COLLECTIVE_OPS and opm:
-            # shapes between '=' and the op name (opm.start(1)) = outputs
-            shapes = _SHAPE_RE.findall(rhs[:opm.start(1)])
-            instr.out_bytes = sum(_shape_bytes(d, s) for d, s in shapes)
+            gsize = _replica_group_size(rhs)
+            if gsize is not None and gsize <= 1:
+                instr.op = ""          # singleton groups: no wire traffic
+            else:
+                # shapes between '=' and the op name (opm.start(1)) = outputs
+                shapes = _SHAPE_RE.findall(rhs[:opm.start(1)])
+                instr.out_bytes = sum(_shape_bytes(d, s) for d, s in shapes)
         elif base == "dot":
             out_dims = _dims(sm.group(2)) if sm else []
             am = re.search(r"dot\(\s*%?([\w.\-]+)", rhs)

@@ -93,6 +93,57 @@ def route(logits, k: int, capacity: int, num_real: int = 0):
     return weights, expert_id, position, keep, aux
 
 
+def route_masked(logits, k: int, capacity: int, num_real: int = 0,
+                 valid=None):
+    """``route`` for a token axis that may carry pad rows, returning
+    psum-able load-balance statistics instead of a local scalar aux.
+
+    ``valid``: (B, S) bool (None = every row real).  Pad rows route to
+    the out-of-range sentinel expert E whose one-hot row is all-zero —
+    they occupy no capacity slot, carry zero gate weight, and a scatter
+    at expert index E is out-of-bounds (dropped), so padding adds no
+    wire bytes and no expert FLOPs.
+
+    Returns weights (B,S,k), expert_id (B,S,k), position (B,S,k),
+    keep (B,S,k) and ``(tok_counts (E,), prob_sums (E,), n_valid ())``.
+    A sharded caller psums the statistics over its token shards and
+    forms the aux loss over the EXACT global batch::
+
+        aux = E * sum(counts / (T * k) * probs / T),  T = n_valid
+
+    which with ``valid=None`` on one shard reduces bitwise to
+    ``route``'s aux (same sums, same order)."""
+    B, S, E = logits.shape
+    if num_real and num_real < E:
+        pad_mask = jnp.arange(E) >= num_real
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, expert_id = jax.lax.top_k(probs, k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    if valid is not None:
+        expert_id = jnp.where(valid[:, :, None], expert_id, E)
+        weights = weights * valid[:, :, None].astype(weights.dtype)
+
+    position, keep, onehot = capacity_positions(
+        expert_id.reshape(B, S * k), E, capacity)
+    position = position.reshape(B, S, k)
+    keep = keep.reshape(B, S, k)
+    if valid is not None:
+        # a pad row's zero one-hot lands at position 0 (< capacity)
+        keep = keep & valid[:, :, None]
+
+    tok_counts = onehot.sum(axis=(0, 1)).astype(jnp.float32)
+    if valid is None:
+        prob_sums = probs.sum(axis=(0, 1))
+        n_valid = jnp.float32(B * S)
+    else:
+        prob_sums = (probs * valid[:, :, None].astype(probs.dtype)
+                     ).sum(axis=(0, 1))
+        n_valid = valid.sum().astype(jnp.float32)
+    return weights, expert_id, position, keep, (tok_counts, prob_sums,
+                                                n_valid)
+
+
 def grouped_mlp(buf, w_gate, w_up, w_down, shard=None):
     """buf: (B, E, C, d) -> (B, E, C, d) through each expert's SwiGLU.
 

@@ -30,7 +30,20 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.trusted_moe import LMAttack, _inject
 from repro.kernels import ref as kref
-from repro.models.moe import route
+from repro.models.moe import route_masked
+
+
+def _shard_map(body, mesh, in_specs, out_specs):
+    """jax.shard_map across the pinned-jax spelling divide (see ROADMAP
+    'jax pinning'): new-style ``jax.shard_map(check_vma=)`` when the
+    installed jax has it, else the experimental ``check_rep=`` spelling."""
+    try:
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    except (TypeError, AttributeError):
+        from jax.experimental.shard_map import shard_map
+        return shard_map(body, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
 
 
 def _ep_body(x, router, wg, wu, wd, *, cfg, msize, batch_axes, fsdp_axes,
@@ -50,31 +63,44 @@ def _ep_body(x, router, wg, wu, wd, *, cfg, msize, batch_axes, fsdp_axes,
     router = jax.lax.all_gather(router, "model", axis=1, tiled=True)
 
     # ---- token-split over the model axis: x arrives replicated across
-    # model shards; each shard routes/dispatches its own T_l/msize slice
+    # model shards; each shard routes/dispatches its own T_l slice
     # (without this every expert would receive msize duplicate copies).
-    # Tiny token counts (decode) skip the split — duplicate dispatch is
-    # correct (each shard combines its own copies), just redundant.
+    # A ragged token count (T_full % msize != 0 — ANY odd batch shape,
+    # not just tiny decode steps) pads the token axis up to a multiple
+    # of msize; pad rows route to the out-of-range sentinel expert (no
+    # capacity slot, no wire bytes, zero combine weight), so wire bytes
+    # stay ~T_full*k*d instead of the old fallback's msize-duplicate
+    # dispatch that multiplied wire bytes and expert FLOPs by msize.
     T_full = B_l * S
-    msplit = msize if T_full % msize == 0 and T_full >= msize else 1
-    T_l = T_full // msplit
-    mid = jax.lax.axis_index("model") % msplit
-    xt = jax.lax.dynamic_slice_in_dim(x.reshape(T_full, d), mid * T_l, T_l)
+    T_l = -(-T_full // msize)
+    T_pad = T_l * msize
+    mid = jax.lax.axis_index("model")
+    xt_full = x.reshape(T_full, d)
+    if T_pad != T_full:
+        xt_full = jnp.concatenate(
+            [xt_full, jnp.zeros((T_pad - T_full, d), x.dtype)], axis=0)
+    xt = jax.lax.dynamic_slice_in_dim(xt_full, mid * T_l, T_l)
+    valid = (jnp.arange(T_l) + mid * T_l < T_full) if T_pad != T_full \
+        else None
 
     # ---- local routing (group = this shard's token slice)
     logits = (xt @ router)[None]                         # (1, T_l, E)
     cap = max(int(cfg.capacity_factor * T_l * k / E), 1)
     cap = -(-cap // 8) * 8
-    weights, expert_id, position, keep, aux = route(
-        logits, k, cap, cfg.num_experts)
+    weights, expert_id, position, keep, stats = route_masked(
+        logits, k, cap, cfg.num_experts,
+        valid=None if valid is None else valid[None])
     weights = weights.reshape(T_l, k)
     eid = expert_id.reshape(T_l * k)
     pos = jnp.where(keep, position, cap - 1).reshape(T_l * k)
     keep = keep.reshape(T_l * k)
 
-    # ---- pack send buffer (E, cap, d)
+    # ---- pack send buffer (E, cap, d); pad rows carry the sentinel
+    # expert id E — out of bounds for the scatter, hence dropped
     tok = jnp.repeat(jnp.arange(T_l), k)
     gath = xt[tok] * keep[:, None].astype(x.dtype)
-    send = jnp.zeros((E, cap, d), x.dtype).at[eid, pos].add(gath)
+    send = jnp.zeros((E, cap, d), x.dtype).at[eid, pos].add(gath,
+                                                            mode="drop")
 
     # ---- all_to_all: experts to their owners
     send = send.reshape(msize, E_l, cap, d)
@@ -95,16 +121,22 @@ def _ep_body(x, router, wg, wu, wd, *, cfg, msize, batch_axes, fsdp_axes,
     ret = jax.lax.all_to_all(back, "model", split_axis=0, concat_axis=0,
                              tiled=False)
     ret = ret.reshape(E, cap, d)                         # home-shard layout
-    yk = ret[eid, pos] * (weights.reshape(T_l * k) *
-                          keep).astype(x.dtype)[:, None]
+    yk = ret.at[eid, pos].get(mode="fill", fill_value=0) * \
+        (weights.reshape(T_l * k) * keep).astype(x.dtype)[:, None]
     y_loc = jnp.zeros((T_l, d), x.dtype).at[tok].add(yk)
-    if msplit > 1:
-        # restore the full token axis (residual stream is model-replicated)
-        y = jax.lax.all_gather(y_loc, "model", axis=0, tiled=True)
-        aux = jax.lax.pmean(aux, batch_axes + ("model",))
-    else:
-        y = y_loc
-        aux = jax.lax.pmean(aux, batch_axes) if batch_axes else aux
+    # restore the full token axis (residual stream is model-replicated)
+    y = jax.lax.all_gather(y_loc, "model", axis=0, tiled=True)
+    if T_pad != T_full:
+        y = y[:T_full]
+    # ---- aux loss over the EXACT global batch from psum'd routing
+    # statistics — identical whether or not the token axis is ragged
+    # (the old msplit==1 / msplit>1 branches averaged per-shard aux,
+    # which disagreed between the two regimes)
+    axes = batch_axes + ("model",)
+    cnt = jax.lax.psum(stats[0], axes)
+    psum_p = jax.lax.psum(stats[1], axes)
+    T = jnp.maximum(jax.lax.psum(stats[2], axes), 1.0)
+    aux = E * jnp.sum((cnt / (T * k)) * (psum_p / T))
     return y.reshape(B_l, S, d), aux
 
 
@@ -160,16 +192,25 @@ def moe_mlp_ep(params, x, cfg, mesh: Mesh, act_rules: dict, *,
     body = functools.partial(
         _ep_body, cfg=cfg, msize=msize, batch_axes=batch_axes,
         fsdp_axes=fsdp_axes, trust_mode=cfg.redundancy.mode, attack=attack)
-    try:
-        mapped = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                               out_specs=out_specs, check_vma=False)
-    except (TypeError, AttributeError):
-        from jax.experimental.shard_map import shard_map
-        mapped = shard_map(body, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, check_rep=False)
+    mapped = _shard_map(body, mesh, in_specs, out_specs)
     y, aux = mapped(x, params["router"], params["w_gate"], params["w_up"],
                     params["w_down"])
-    if cfg.num_shared_experts:                             # plain GSPMD path
+    if cfg.num_shared_experts:
         sp = params["shared"]
-        y = y + (jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])) @ sp["w_down"]
+        y_sh = (jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])) @ sp["w_down"]
+        if cfg.redundancy.mode != "off" and "replica" in mesh.axis_names:
+            # shared experts used to run outside the shard_map and skip
+            # _ep_vote entirely — a tampered shared expert was invisible
+            # to redundancy voting.  Vote their dense rows over the same
+            # replica axis as the routed buckets (one pseudo-expert row
+            # per shard).
+            def shared_body(yl):
+                bl, s, dd = yl.shape
+                out = _ep_vote(yl.reshape(1, bl * s, dd),
+                               cfg.redundancy.mode, attack)
+                return out.reshape(bl, s, dd)
+            y_sh = _shard_map(shared_body, mesh,
+                              (P(bspec, None, None),),
+                              P(bspec, None, None))(y_sh)
+        y = y + y_sh
     return y, aux * cfg.router_aux_weight

@@ -6,8 +6,14 @@ axes for whatever mesh is in play:
 
   single-pod        (data=16, model=16)
   multi-pod         (pod=2, data=16, model=16)     # pod folds into batch
-  trusted (B-MoE)   (data=16/r, replica=r, model=16)
+  trusted (B-MoE)   (data/r, replica=r, model)     # widths device-derived
+  edge (B-MoE sys)  (data, model=edge shards)      # expert bank over model
   CPU tests         mesh=None -> every annotation is a no-op
+
+The edge mesh (launch.mesh.make_edge_mesh) backs BMoESystem's
+``mesh="on"`` rounds: ``Sharder(mesh, rules={"experts": "model"})``
+places the expert bank, and the round step exchanges sparse dispatch
+buckets over "model" via all_to_all (core.bmoe._mesh_sparse_forward).
 
 The "replica" axis is *never* assigned to a logical axis: replicas hold
 identical copies of the batch shard (the paper's redundancy mechanism) and

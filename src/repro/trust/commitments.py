@@ -158,6 +158,8 @@ class RoundCommitment:
     task_digest: str = ""
     row_index: Optional[np.ndarray] = None  # (N, cap) task row per slot
     routing_digest: str = ""                # binds row_index on-chain
+    num_shards: int = 1                     # edge shards that hashed locally
+    shard_roots: Optional[List[str]] = None  # per-edge subtree roots
 
     @property
     def num_leaves(self) -> int:
@@ -191,31 +193,72 @@ def routing_digest(row_index: np.ndarray) -> str:
                         + str(a.dtype).encode())
 
 
+def _leaf_digests(claimed: np.ndarray, bounds: List[int]) -> List[str]:
+    """Leaf digests for one executor's (or one edge shard's) expert
+    slice, in (expert, chunk) row-major leaf order."""
+    n_experts = claimed.shape[0]
+    chunks = len(bounds) - 1
+    widths = [bounds[c + 1] - bounds[c] for c in range(chunks)]
+    if len(set(widths)) == 1:
+        # equal chunks: digest the whole slice through one reshaped view
+        # (leaf order is (e, c) row-major, exactly the reshape order)
+        return leaf_digest_batch(
+            claimed.reshape((n_experts * chunks, widths[0])
+                            + claimed.shape[2:]))
+    per_chunk = [leaf_digest_batch(claimed[:, bounds[c]:bounds[c + 1]])
+                 for c in range(chunks)]
+    return [per_chunk[c][e]
+            for e in range(n_experts) for c in range(chunks)]
+
+
 def commit_outputs(outputs, *, round_id: int, executor: int,
                    chunks_per_expert: int = 4, task_digest: str = "",
-                   row_index: Optional[np.ndarray] = None) -> RoundCommitment:
+                   row_index: Optional[np.ndarray] = None,
+                   num_shards: int = 1) -> RoundCommitment:
     """Build the executor's round commitment from its claimed per-expert
     outputs ``(N, B, C)`` — or, with ``row_index``, from its sparse
     capacity-bucketed buffers ``(N, capacity, C)`` (see RoundCommitment:
     the routing indices travel with the commitment so auditors re-derive
-    the same buckets)."""
+    the same buckets).
+
+    ``num_shards`` > 1 models mesh execution: the expert axis splits
+    into contiguous edge slices (shard ``s`` owns experts
+    ``[s*E_l, (s+1)*E_l)``), each edge digests only its local
+    ``(E_l, capacity, C)`` buffers into its own Merkle subtree, and the
+    round root is the Merkle reduction over the ``num_shards`` shard
+    roots.  Each shard's leaf count must be a power of two — then every
+    shard subtree is a complete subtree of the flat tree, so the
+    root-of-roots, every leaf's authentication path, and hence every
+    fraud proof are BIT-IDENTICAL to the single-device commitment
+    (pinned in tests/test_mesh_bmoe.py)."""
     claimed = np.ascontiguousarray(outputs)
     n_experts, batch = claimed.shape[:2]
+    if num_shards < 1 or n_experts % num_shards:
+        raise ValueError(f"num_shards ({num_shards}) must divide the "
+                         f"expert count ({n_experts})")
     bounds = chunk_bounds(batch, chunks_per_expert)
     chunks = len(bounds) - 1
-    widths = [bounds[c + 1] - bounds[c] for c in range(chunks)]
-    if len(set(widths)) == 1:
-        # equal chunks: digest the whole round through one reshaped view
-        # (leaf order is (e, c) row-major, exactly the reshape order)
-        digests = leaf_digest_batch(
-            claimed.reshape((n_experts * chunks, widths[0])
-                            + claimed.shape[2:]))
+    shard_roots: Optional[List[str]] = None
+    if num_shards > 1:
+        e_l = n_experts // num_shards
+        digests = []
+        for s in range(num_shards):   # each edge hashes only its slice
+            digests.extend(_leaf_digests(
+                claimed[s * e_l:(s + 1) * e_l], bounds))
+        lps = len(digests) // num_shards
+        if lps & (lps - 1):
+            raise ValueError(
+                f"shard-local commitment needs a power-of-two leaf count "
+                f"per shard, got ({n_experts}/{num_shards}) experts x "
+                f"{chunks} chunks = {lps}; pick chunks_per_expert or the "
+                f"shard count so (num_experts/num_shards)*chunks_per_expert "
+                f"is a power of two")
+        shard_roots = [MerkleTree(digests[s * lps:(s + 1) * lps]).root
+                       for s in range(num_shards)]
+        tree = MerkleTree(shard_roots)
     else:
-        per_chunk = [leaf_digest_batch(claimed[:, bounds[c]:bounds[c + 1]])
-                     for c in range(chunks)]
-        digests = [per_chunk[c][e]
-                   for e in range(n_experts) for c in range(chunks)]
-    tree = MerkleTree(digests)
+        digests = _leaf_digests(claimed, bounds)
+        tree = MerkleTree(digests)
     if row_index is not None:
         row_index = np.ascontiguousarray(np.asarray(row_index, np.int32))
         if row_index.shape != (n_experts, batch):
@@ -227,4 +270,5 @@ def commit_outputs(outputs, *, round_id: int, executor: int,
                            leaf_digests=digests, claimed=claimed,
                            task_digest=task_digest, row_index=row_index,
                            routing_digest=(routing_digest(row_index)
-                                           if row_index is not None else ""))
+                                           if row_index is not None else ""),
+                           num_shards=num_shards, shard_roots=shard_roots)

@@ -216,11 +216,13 @@ class OptimisticProtocol:
 
     # ------------------------------------------------------------ commit
     def commit(self, round_id: int, executor: int, outputs,
-               task_digest: str = "", row_index=None) -> RoundState:
+               task_digest: str = "", row_index=None,
+               num_shards: int = 1) -> RoundState:
         commitment = commit_outputs(
             outputs, round_id=round_id, executor=executor,
             chunks_per_expert=self.cfg.chunks_per_expert,
-            task_digest=task_digest, row_index=row_index)
+            task_digest=task_digest, row_index=row_index,
+            num_shards=num_shards)
         state = RoundState(round_id=round_id, executor=executor,
                            commitment=commitment, phase=RoundPhase.ACCEPTED,
                            deadline=round_id + self.cfg.challenge_window)
