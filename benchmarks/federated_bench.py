@@ -1,0 +1,233 @@
+"""Federated robustness: the CI gate for ``repro.fed``.
+
+Three gated claims:
+
+1. **Poisoning defense** — under a gradient-scaling attacker the
+   defended rule (median-norm clip + cosine screen) stays within 10% of
+   the clean-run accuracy while undefended FedAvg degrades more; a
+   sign-flip attacker is rejected outright by the cosine screen.
+2. **Verified aggregation** — a dishonest aggregator (result
+   substitution) is convicted by the recompute court, slashed, and
+   rolled back on-chain; the honest replay leaves the global model
+   bit-identical to a clean run of the same seed.
+3. **Straggler/dropout tolerance** — rounds with 20% stragglers and 10%
+   dropouts complete without stalling (one block per round), the
+   ``fed.stragglers`` / ``fed.dropouts`` / ``fed.retries`` counters are
+   visible in ``obs_report()``, and two seeded runs are bit-identical.
+
+Writes ``BENCH_federated.json`` and exits non-zero if any gate fails.
+All round time is *modeled* (deadline/backoff seconds on deterministic
+cost models) — nothing here depends on the host machine.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, timed, timer_value
+from repro.data.synthetic import FMNIST, make_image_dataset
+from repro.fed import FedAttack, FedConfig, FedCoordinator
+from repro.trust.protocol import TrustConfig
+
+ROUNDS = int(os.environ.get("REPRO_BENCH_FED_ROUNDS", "5"))
+N_TRAIN = 2000
+N_TEST = 500
+
+_DATA = None
+
+
+def _data():
+    global _DATA
+    if _DATA is None:
+        _DATA = make_image_dataset(FMNIST, n_train=N_TRAIN, n_test=N_TEST,
+                                   seed=0)
+    return _DATA
+
+
+def _cfg(**kw) -> FedConfig:
+    base = dict(num_edges=6, num_experts=6, hidden=16, local_steps=3,
+                local_batch=32, seed=0,
+                trust=TrustConfig(chunks_per_expert=4, audit_rate=1.0,
+                                  challenge_window=2))
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _run(cfg: FedConfig, rounds: int = ROUNDS) -> FedCoordinator:
+    x, y, *_ = _data()
+    co = FedCoordinator(cfg, x, y)
+    for _ in range(rounds):
+        co.run_round()
+    co.flush_trust()
+    return co
+
+
+def _acc(co: FedCoordinator) -> float:
+    *_, xt, yt = _data()
+    return co.evaluate(xt, yt)
+
+
+def bench_poisoning() -> dict:
+    grad = FedAttack(malicious_edges=(2,), update_attack="grad_scale",
+                     scale=200.0)
+    flip = FedAttack(malicious_edges=(2,), update_attack="sign_flip",
+                     scale=5.0)
+    with timed("fed.poisoning"):
+        clean = _acc(_run(_cfg(verify="off")))
+        grad_fedavg = _acc(_run(_cfg(verify="off", rule="fedavg",
+                                     attack=grad)))
+        grad_def = _acc(_run(_cfg(verify="off", attack=grad)))
+        flip_fedavg = _acc(_run(_cfg(verify="off", rule="fedavg",
+                                     attack=flip)))
+        flip_run = _run(_cfg(verify="off", attack=flip))
+        flip_def = _acc(flip_run)
+    return {
+        "acc_clean": clean,
+        "acc_grad_scale_fedavg": grad_fedavg,
+        "acc_grad_scale_defended": grad_def,
+        "acc_sign_flip_fedavg": flip_fedavg,
+        "acc_sign_flip_defended": flip_def,
+        "sign_flip_rejected_updates":
+            flip_run.obs_report()["fed"]["rejected_updates"],
+        "defended_within_10pct_of_clean": bool(grad_def >= 0.9 * clean),
+        "undefended_degrades_more": bool(grad_fedavg < grad_def),
+    }
+
+
+def bench_verified_aggregation() -> dict:
+    atk = FedAttack(malicious_edges=(1,), dishonest_aggregator=True)
+    with timed("fed.verified_agg"):
+        clean = _run(_cfg())
+        bad = _run(_cfg(attack=atk))
+    rep = bad.obs_report()
+    same = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(clean.global_params),
+                        jax.tree_util.tree_leaves(bad.global_params)))
+    rbs = bad.ledger.rollbacks()
+    return {
+        "convictions": rep["fed"]["convictions"],
+        "replayed_rounds": rep["fed"]["replayed_rounds"],
+        "rollback_blocks": len(rbs),
+        "slashed_executors": sorted({e for b in rbs
+                                     for e in b.payload["slashed"]}),
+        "executor_stake_after": bad.protocol.stakes.stake[1],
+        "honest_stake_after": bad.protocol.stakes.stake[0],
+        "post_rollback_state_matches_clean_run": bool(same),
+        "chain_valid": bool(bad.ledger.verify_chain()),
+        "acc_after_rollback": _acc(bad),
+    }
+
+
+def bench_straggler_dropout() -> dict:
+    cfg = _cfg(straggler_prob=0.2, dropout_prob=0.1, seed=5)
+    with timed("fed.robustness"):
+        a = _run(cfg, rounds=ROUNDS + 1)
+        b = _run(cfg, rounds=ROUNDS + 1)
+    rep = a.obs_report()
+    identical = (rep["fed"] == b.obs_report()["fed"] and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree_util.tree_leaves(a.global_params),
+                        jax.tree_util.tree_leaves(b.global_params))))
+    return {
+        "rounds_requested": ROUNDS + 1,
+        "rounds_completed": rep["fed"]["rounds"],
+        "blocks": len(a.ledger.aggregations()),
+        "stragglers": rep["fed"]["stragglers"],
+        "dropouts": rep["fed"]["dropouts"],
+        "carried_deltas": rep["fed"]["carried_deltas"],
+        "evictions": rep["fed"]["evictions"],
+        "counters_in_obs_report": all(
+            f"fed.{k}" in rep["metrics"]
+            for k in ("stragglers", "dropouts", "retries")),
+        "identical_across_runs": bool(identical),
+        "acc": _acc(a),
+    }
+
+
+def main(json_path: str = "BENCH_federated.json", gate: bool = True):
+    poison = bench_poisoning()
+    agg = bench_verified_aggregation()
+    robust = bench_straggler_dropout()
+    result = {
+        "config": {"rounds": ROUNDS, "num_edges": 6, "num_experts": 6,
+                   "grad_scale": 200.0, "sign_flip_scale": 5.0},
+        "poisoning": poison,
+        "verified_aggregation": agg,
+        "straggler_dropout": robust,
+        "modeled": {"poisoning_s": timer_value("fed.poisoning"),
+                    "verified_agg_s": timer_value("fed.verified_agg"),
+                    "robustness_s": timer_value("fed.robustness")},
+    }
+    with open(json_path, "w") as f:
+        json.dump(result, f, indent=2)
+
+    rows = [
+        row("fed_poisoning", 0.0,
+            f"clean={poison['acc_clean']:.3f};"
+            f"grad_fedavg={poison['acc_grad_scale_fedavg']:.3f};"
+            f"grad_defended={poison['acc_grad_scale_defended']:.3f};"
+            f"flip_rejected={poison['sign_flip_rejected_updates']}"),
+        row("fed_verified_agg", 0.0,
+            f"convictions={agg['convictions']};"
+            f"rollback_blocks={agg['rollback_blocks']};"
+            f"state_matches_clean={agg['post_rollback_state_matches_clean_run']}"),
+        row("fed_robustness", 0.0,
+            f"rounds={robust['rounds_completed']}/"
+            f"{robust['rounds_requested']};"
+            f"stragglers={robust['stragglers']};"
+            f"dropouts={robust['dropouts']};"
+            f"identical={robust['identical_across_runs']}"),
+    ]
+    if gate:
+        if not poison["defended_within_10pct_of_clean"]:
+            raise SystemExit(
+                f"fed gate: defended accuracy "
+                f"{poison['acc_grad_scale_defended']:.3f} under "
+                f"gradient-scaling not within 10% of clean "
+                f"{poison['acc_clean']:.3f}")
+        if not poison["undefended_degrades_more"]:
+            raise SystemExit(
+                f"fed gate: undefended FedAvg "
+                f"{poison['acc_grad_scale_fedavg']:.3f} did not degrade "
+                f"below defended "
+                f"{poison['acc_grad_scale_defended']:.3f}")
+        if poison["sign_flip_rejected_updates"] < 1:
+            raise SystemExit("fed gate: cosine screen rejected no "
+                             "sign-flip update")
+        if not (agg["convictions"] >= 1 and agg["rollback_blocks"] >= 1):
+            raise SystemExit(f"fed gate: dishonest aggregator not "
+                             f"convicted + rolled back ({agg})")
+        if not agg["post_rollback_state_matches_clean_run"]:
+            raise SystemExit("fed gate: post-rollback state diverges "
+                             "from the clean run")
+        if not (agg["chain_valid"]
+                and agg["executor_stake_after"]
+                < agg["honest_stake_after"]):
+            raise SystemExit(f"fed gate: no slash recorded or chain "
+                             f"invalid ({agg})")
+        if robust["rounds_completed"] != robust["rounds_requested"] \
+                or robust["blocks"] != robust["rounds_requested"]:
+            raise SystemExit(f"fed gate: rounds stalled under "
+                             f"stragglers+dropouts ({robust})")
+        if not (robust["stragglers"] > 0 and robust["dropouts"] > 0):
+            raise SystemExit(f"fed gate: fault injection produced no "
+                             f"stragglers/dropouts ({robust})")
+        if not robust["counters_in_obs_report"]:
+            raise SystemExit("fed gate: fed.* counters missing from "
+                             "obs_report()")
+        if not robust["identical_across_runs"]:
+            raise SystemExit("fed gate: seeded runs not bit-identical")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_federated.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(args.json)

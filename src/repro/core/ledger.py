@@ -99,3 +99,16 @@ class Ledger:
         (kind="rollback"), each naming the convicted round, the slashed
         executor, and the voided chain of optimistic descendants."""
         return self.find_all(kind="rollback")
+
+    def aggregations(self) -> List[Block]:
+        """Federated-aggregation record: one block per training round
+        (kind="fed_round"), binding the aggregation commitment root, the
+        participant set and the received/straggled/dropped split."""
+        return self.find_all(kind="fed_round")
+
+    def slashes(self) -> List[Block]:
+        """Every slash-bearing block, chain order: DA slashes plus any
+        rollback block that burned an executor's stake."""
+        return [b for b in self.blocks
+                if b.payload.get("kind") == "da_slash"
+                or b.payload.get("slashed")]

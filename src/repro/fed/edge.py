@@ -1,0 +1,100 @@
+"""One federated edge device: local shard, local expert subset, deltas.
+
+An edge holds a fixed Dirichlet shard of the training set
+(``data.synthetic.dirichlet_shards``) and OWNS a small subset of the
+expert bank.  Each round it pulls the coordinator's global parameters,
+runs a few steps of local SGD with the gradient masked to its owned
+experts (``train.step.make_fed_local_step``), and publishes the
+resulting weight **delta** — not the weights — as one versioned object
+``fed/delta/{edge}`` through ``ExpertStore.put_version``.  The masked
+delta is zero off the edge's expert subset, so the all-zero chunks
+dedup against every other edge's upload and the per-round network cost
+scales with experts-per-edge, not bank size.
+
+Poisoning attacks live HERE (the adversary is an edge, or an
+aggregator colluding with one): ``attack="grad_scale"`` multiplies the
+honest delta by ``scale`` (magnitude poisoning), ``"sign_flip"``
+negates and scales it (directed poisoning).  Attacks only perturb the
+published delta — local training itself is always honest, so the
+defended aggregation rule is the only thing standing between a poison
+and the global model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class DeltaRecord:
+    """What the aggregator knows about one received delta.  The manifest
+    CID is what gets committed on-chain — auditors re-fetch the delta by
+    CID, so a record is exactly one aggregation input."""
+    edge: int
+    round_id: int                  # round the delta arrived in
+    base_round: int                # global version it was computed against
+    manifest_cid: str
+    num_samples: int               # FedAvg weight (shard size)
+    arrival_s: float               # modeled arrival offset within round
+    loss: float                    # edge's final local training loss
+
+
+class FedEdge:
+    """Local trainer for one edge."""
+
+    def __init__(self, edge_id: int, x, y, owned: np.ndarray, store,
+                 local_step, *, local_steps: int, local_batch: int,
+                 seed: int):
+        self.edge_id = edge_id
+        self.x = np.asarray(x, np.float32)
+        self.y = np.asarray(y, np.int32)
+        self.owned = np.asarray(owned, np.float32)      # (N,) mask
+        self.store = store
+        self.local_step = local_step
+        self.local_steps = local_steps
+        self.local_batch = local_batch
+        self.seed = seed
+
+    @property
+    def num_samples(self) -> int:
+        return len(self.x)
+
+    def local_update(self, global_params, round_id: int, *,
+                     attack: Optional[str] = None,
+                     attack_scale: float = 1.0) -> Tuple[dict, float]:
+        """Train locally from ``global_params``; return ``(delta_tree,
+        final_loss)`` with the delta a float32 numpy pytree.  Seeded by
+        (seed, edge, round) only — a rollback replay that re-runs this
+        round reproduces the delta bit-for-bit."""
+        rng = np.random.default_rng([self.seed, 3, self.edge_id, round_id])
+        params = global_params
+        owned = self.owned
+        loss = 0.0
+        for _ in range(self.local_steps):
+            idx = rng.integers(0, len(self.x),
+                               size=min(self.local_batch, len(self.x)))
+            params, loss = self.local_step(
+                params, self.x[idx], self.y[idx], owned)
+        delta = jax.tree_util.tree_map(
+            lambda new, old: np.asarray(new, np.float32)
+            - np.asarray(old, np.float32),
+            params, global_params)
+        if attack == "grad_scale":
+            delta = jax.tree_util.tree_map(
+                lambda d: np.asarray(d * attack_scale, np.float32), delta)
+        elif attack == "sign_flip":
+            delta = jax.tree_util.tree_map(
+                lambda d: np.asarray(-attack_scale * d, np.float32), delta)
+        elif attack is not None and attack != "none":
+            raise ValueError(f"unknown update attack {attack!r}")
+        return delta, float(loss)
+
+    def publish(self, delta, round_id: int):
+        """Upload the round's delta as ``fed/delta/{edge}`` version
+        ``round_id`` (chunk-dedup path; zero chunks are shared across
+        all edges).  Returns the chunk manifest."""
+        return self.store.put_version(
+            f"fed/delta/{self.edge_id}", delta, round_id)

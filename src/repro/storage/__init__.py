@@ -19,14 +19,14 @@ from repro.storage.chunks import (DEFAULT_CHUNK_BYTES, ChunkManifest,
                                   LeafSpec, assemble_tree, build_manifest,
                                   deserialize_tree, serialize_tree,
                                   split_chunks)
-from repro.storage.network import (NetworkCostModel, ReplicaFault,
-                                   StorageNetwork, StorageNode)
+from repro.storage.network import (DataUnavailable, NetworkCostModel,
+                                   ReplicaFault, StorageNetwork, StorageNode)
 from repro.storage.store import ChunkUnavailableError, ExpertStore
 
 __all__ = [
     "ExpertCache", "GateEMA",
     "DEFAULT_CHUNK_BYTES", "ChunkManifest", "LeafSpec", "assemble_tree",
     "build_manifest", "deserialize_tree", "serialize_tree", "split_chunks",
-    "NetworkCostModel", "ReplicaFault", "StorageNetwork", "StorageNode",
-    "ChunkUnavailableError", "ExpertStore",
+    "DataUnavailable", "NetworkCostModel", "ReplicaFault", "StorageNetwork",
+    "StorageNode", "ChunkUnavailableError", "ExpertStore",
 ]

@@ -16,13 +16,22 @@ Fault injection (for the storage/serving fault suite and the
 data-availability challenges in ``repro.trust.da``): a replica can be
 *corrupted* (bytes flipped — detected by CID verification, served
 around) or *withheld* (the node refuses to produce the bytes — the
-DA-challengeable fault).
+DA-challengeable fault; ``transient=k`` models a node that recovers
+after ``k`` failed probes, the case the read retry loop exists for).
+
+Reads are retried: a ``get`` whose first replica scan comes up empty
+re-scans up to ``retry_budget`` times with exponentially-growing
+*modeled* backoff seconds (booked to ``storage.network.retries`` /
+``.modeled_backoff_s`` in the obs registry), then surfaces a hard
+``DataUnavailable`` — a ``KeyError`` subclass, so every existing
+handler (``ExpertStore.fetch_manifest`` -> ``ChunkUnavailableError``,
+the DA challenges) still fires.
 """
 from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.ledger import digest_bytes
 from repro.obs.metrics import CounterGroup, MetricsRegistry
@@ -40,10 +49,29 @@ class NetworkCostModel:
 
 @dataclasses.dataclass
 class ReplicaFault:
-    """One observed bad replica: a get() that had to skip a node."""
+    """One observed bad replica: a get() that had to skip a node, or a
+    dropped node that took the last replica of an object with it."""
     cid: str
     node_id: int
-    kind: str                                  # "corrupted" | "withheld"
+    kind: str                     # "corrupted" | "withheld" | "lost"
+
+
+class DataUnavailable(KeyError):
+    """Hard unavailability: no replica produced verifiable bytes within
+    the read retry budget (or the last replica left the network).  A
+    ``KeyError`` subclass so existing recovery paths — the store's
+    ``ChunkUnavailableError`` wrap, the DA challenges — fire unchanged.
+    """
+
+    def __init__(self, cid: str, kind: str, retries: int = 0):
+        super().__init__(cid)
+        self.cid = cid
+        self.kind = kind
+        self.retries = retries
+
+    def __str__(self) -> str:
+        tail = f" after {self.retries} retries" if self.retries else ""
+        return f"CID {self.cid[:12]}... {self.kind}{tail}"
 
 
 class StorageNode:
@@ -51,12 +79,20 @@ class StorageNode:
         self.node_id = node_id
         self.objects: Dict[str, bytes] = {}
         self.withheld: set = set()             # cids the node refuses to serve
+        self.transient: Dict[str, int] = {}    # cid -> refusals left before
+        #                                        the node serves it again
         self.reads = 0                         # served (healthy) reads
 
     def put(self, cid: str, data: bytes) -> None:
         self.objects[cid] = data
 
     def get(self, cid: str) -> Optional[bytes]:
+        left = self.transient.get(cid)
+        if left is not None:
+            if left > 0:                       # still refusing — but the
+                self.transient[cid] = left - 1  # refusal budget drains, so
+                return None                    # a retried read gets through
+            del self.transient[cid]
         if cid in self.withheld:
             return None
         return self.objects.get(cid)
@@ -73,9 +109,14 @@ class StorageNetwork:
     def __init__(self, num_nodes: int = 4, replication: int = 2,
                  seed: int = 0, cost: Optional[NetworkCostModel] = None,
                  metrics: Optional[MetricsRegistry] = None,
-                 namespace: str = "storage.network"):
+                 namespace: str = "storage.network",
+                 retry_budget: int = 2, backoff_base_s: float = 0.05):
         self.nodes: List[StorageNode] = [StorageNode(i) for i in range(num_nodes)]
         self.replication = min(replication, num_nodes)
+        # read retries: extra full replica scans after a failed one, with
+        # exponential modeled backoff (deterministic — no wall clock)
+        self.retry_budget = int(retry_budget)
+        self.backoff_base_s = float(backoff_base_s)
         # placement and read-scan orders draw from SEPARATE seeded
         # streams: the number of reads performed must never perturb
         # where later objects are placed (determinism across call
@@ -87,13 +128,18 @@ class StorageNetwork:
         # CIDs a read observed a bad replica of: a later re-offer of the
         # verified bytes heals those copies (see put)
         self._suspect: set = set()
+        # CIDs whose last replica left with a dropped node (the trust
+        # event readers surface instead of an uncaught KeyError)
+        self.lost: set = set()
         # transfer ledger: plain-dict interface, but with a registry
         # every entry is the live metric {namespace}.{key} (the obs
         # layer's view and this dict are the same numbers)
         self.stats = CounterGroup(
             {"put_requests": 0, "put_bytes": 0, "dedup_puts": 0,
              "healed_puts": 0, "get_requests": 0, "get_bytes": 0,
-             "modeled_put_s": 0.0, "modeled_get_s": 0.0},
+             "modeled_put_s": 0.0, "modeled_get_s": 0.0,
+             "retries": 0, "modeled_backoff_s": 0.0,
+             "lost_objects": 0, "repaired_replicas": 0},
             metrics, namespace)
 
     # ------------------------------------------------------------ write
@@ -115,6 +161,7 @@ class StorageNetwork:
                 self._suspect.discard(cid)
             self.stats["dedup_puts"] += 1
             return cid
+        self.lost.discard(cid)                 # re-uploaded: available again
         for node in self._place_rng.sample(self.nodes, self.replication):
             node.put(cid, data)
             self.stats["put_requests"] += 1
@@ -134,32 +181,67 @@ class StorageNetwork:
         """Nodes committed to holding the object (withholding included)."""
         return [n.node_id for n in self.nodes if n.holds(cid)]
 
-    def get(self, cid: str, verify: bool = True) -> bytes:
-        """Fetch by CID: probe replicas in a per-request randomized order
-        (seeded), skip corrupted/withheld copies (recording the fault),
-        and serve the first copy whose bytes hash back to the CID — the
-        verified-refetch path a tampered replica triggers."""
+    def _scan(self, cid: str, verify: bool,
+              seen: set) -> Tuple[Optional[bytes], bool]:
+        """One randomized pass over the replicas: (bytes or None, whether
+        any replica produced bytes at all).  ``seen`` dedupes the fault
+        records across the retry passes of a single request."""
         found = False
         for node in self._scan_rng.sample(self.nodes, len(self.nodes)):
             data = node.get(cid)
             if data is None:
-                if node.holds(cid):            # committed but not serving
+                if node.holds(cid) \
+                        and (node.node_id, "withheld") not in seen:
+                    seen.add((node.node_id, "withheld"))
                     self.faults.append(ReplicaFault(cid, node.node_id,
                                                     "withheld"))
                 continue
             found = True
             if verify and digest_bytes(data) != cid:
-                self.faults.append(ReplicaFault(cid, node.node_id,
-                                                "corrupted"))
+                if (node.node_id, "corrupted") not in seen:
+                    seen.add((node.node_id, "corrupted"))
+                    self.faults.append(ReplicaFault(cid, node.node_id,
+                                                    "corrupted"))
                 self._suspect.add(cid)         # heal on the next re-offer
                 continue                       # try another replica
             node.reads += 1
             self.stats["get_requests"] += 1
             self.stats["get_bytes"] += len(data)
             self.stats["modeled_get_s"] += self.cost.seconds(len(data))
+            return data, True
+        return None, found
+
+    def get(self, cid: str, verify: bool = True) -> bytes:
+        """Fetch by CID: probe replicas in a per-request randomized order
+        (seeded), skip corrupted/withheld copies (recording the fault),
+        and serve the first copy whose bytes hash back to the CID — the
+        verified-refetch path a tampered replica triggers.
+
+        A failed pass is retried up to ``retry_budget`` times as long as
+        some node is still *committed* to the object (transient refusals
+        recover, healed replicas reappear); each retry books one
+        ``retries`` tick plus exponentially-growing modeled backoff
+        seconds.  An exhausted budget surfaces ``DataUnavailable`` — the
+        hard fault DA challenges attribute and slash."""
+        seen: set = set()
+        data, found = self._scan(cid, verify, seen)
+        retries = 0
+        while data is None and retries < self.retry_budget \
+                and any(n.holds(cid) for n in self.nodes):
+            retries += 1
+            self.stats["retries"] += 1
+            self.stats["modeled_backoff_s"] += \
+                self.backoff_base_s * (2 ** (retries - 1))
+            data, f = self._scan(cid, verify, seen)
+            found = found or f
+        if data is not None:
             return data
-        kind = "corrupted on every replica" if found else "not found"
-        raise KeyError(f"CID {cid[:12]}... {kind} on any storage node")
+        if cid in self.lost:
+            raise DataUnavailable(cid, "lost with its last replica",
+                                  retries)
+        kind = ("corrupted on every replica" if found else
+                "unavailable on every replica" if seen else "not found")
+        raise DataUnavailable(cid, kind, retries)
 
     def get_tree(self, cid: str, like):
         from repro.storage.chunks import deserialize_tree
@@ -177,9 +259,50 @@ class StorageNetwork:
         for node in self.nodes:
             node.objects.pop(cid, None)
             node.withheld.discard(cid)
+            node.transient.pop(cid, None)
 
-    def drop_node(self, node_id: int) -> None:
+    def _healthy_bytes(self, cid: str) -> Optional[bytes]:
+        """Verified bytes from any replica, without read accounting or
+        fault records (the maintenance path re-replication uses)."""
+        for node in self.nodes:
+            data = node.objects.get(cid)
+            if data is not None and digest_bytes(data) == cid:
+                return data
+        return None
+
+    def drop_node(self, node_id: int, repair: bool = False) -> None:
+        """Remove a node.  Every object it held is checked against the
+        survivors: with ``repair=True`` the verified bytes are re-
+        replicated from a surviving replica back up to the replication
+        factor (so a fetch racing the drop still finds a healthy copy);
+        an object whose LAST replica left with the node is recorded as a
+        ``lost`` ReplicaFault trust event (and later fetches surface
+        ``DataUnavailable``) instead of dying in an uncaught KeyError."""
+        victim = next((n for n in self.nodes if n.node_id == node_id), None)
         self.nodes = [n for n in self.nodes if n.node_id != node_id]
+        if victim is None:
+            return
+        for cid in sorted(set(victim.objects) | set(victim.withheld)):
+            survivors = [n for n in self.nodes if n.holds(cid)]
+            if not survivors:
+                self.faults.append(ReplicaFault(cid, node_id, "lost"))
+                self.lost.add(cid)
+                self.stats["lost_objects"] += 1
+                continue
+            if not repair:
+                continue
+            data = self._healthy_bytes(cid)
+            if data is None:
+                continue        # survivors all corrupt/withheld: DA's case
+            holders = {n.node_id for n in survivors}
+            spares = [n for n in self.nodes if n.node_id not in holders]
+            need = min(self.replication, len(self.nodes)) - len(holders)
+            if need <= 0 or not spares:
+                continue
+            for node in self._place_rng.sample(spares,
+                                               min(need, len(spares))):
+                node.put(cid, data)
+                self.stats["repaired_replicas"] += 1
 
     def repair(self, cid: str, node_id: int) -> bool:
         """Overwrite a node's replica with verified bytes refetched from
@@ -193,6 +316,7 @@ class StorageNetwork:
             if node.node_id == node_id:
                 node.put(cid, data)
                 node.withheld.discard(cid)
+                node.transient.pop(cid, None)
                 return True
         return False
 
@@ -216,11 +340,18 @@ class StorageNetwork:
             data = bytearray(b"\x00")
         node.objects[cid] = bytes(data)
 
-    def withhold(self, cid: str, node_id: Optional[int] = None) -> None:
+    def withhold(self, cid: str, node_id: Optional[int] = None,
+                 transient: int = 0) -> None:
         """Make replica(s) refuse to serve the object while still being
-        committed to it — the data-availability fault."""
+        committed to it — the data-availability fault.  ``transient=k``
+        makes the refusal recover after ``k`` failed probes (the flaky-
+        replica case the read retry budget is sized for); the default is
+        a permanent withhold until repaired."""
         for node in self.nodes:
             if node_id is not None and node.node_id != node_id:
                 continue
             if cid in node.objects:
-                node.withheld.add(cid)
+                if transient > 0:
+                    node.transient[cid] = int(transient)
+                else:
+                    node.withheld.add(cid)

@@ -195,3 +195,47 @@ def make_step(cfg: ModelConfig, kind: str, mesh=None,
     if kind == "decode":
         return make_decode_step(cfg, mesh, unroll=unroll)
     raise ValueError(kind)
+
+
+# ------------------------------------------------------- federated edge
+def make_fed_local_step(num_experts: int, top_k: int, lr: float,
+                        apply_all):
+    """Jitted local SGD update for one federated edge (``repro.fed``).
+
+    The edge runs the full-bank dense MoE forward (gate top-k mixture
+    over ``apply_all``'s (N, B, C) outputs) but its gradient is masked
+    to the experts it OWNS: unowned experts receive exactly zero update,
+    so the edge's published delta is zero (and chunk-dedups away) off
+    its expert subset.  The gate is trained by every edge.
+
+    Returns ``step(params, x, y, owned) -> (params, loss)`` where
+    ``params = {"gate", "experts"}``, ``x`` is (B, in_dim), ``y`` (B,)
+    int labels and ``owned`` a float (N,) ownership mask.
+    """
+    from repro.core import experts as ex
+
+    def moe_loss(params, x, y):
+        logits = ex.gate_apply(params["gate"], x)
+        w, _ = ex.sparse_gate_weights(logits, top_k)
+        outs = apply_all(params["experts"], x)        # (N, B, C)
+        mix = jnp.einsum("bn,nbc->bc", w, outs)
+        logp = jax.nn.log_softmax(mix)
+        return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+    def local_step(params, x, y, owned):
+        loss, grads = jax.value_and_grad(moe_loss)(params, x, y)
+
+        def mask_expert(g):
+            shape = (num_experts,) + (1,) * (g.ndim - 1)
+            return g * owned.reshape(shape)
+
+        new = {
+            "gate": jax.tree_util.tree_map(
+                lambda p, g: p - lr * g, params["gate"], grads["gate"]),
+            "experts": jax.tree_util.tree_map(
+                lambda p, g: p - lr * mask_expert(g),
+                params["experts"], grads["experts"]),
+        }
+        return new, loss
+
+    return jax.jit(local_step)

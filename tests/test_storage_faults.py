@@ -444,3 +444,94 @@ def test_dense_dispatch_systems_share_the_storage_path():
     s.train_round(x, y)
     assert s.ledger.blocks[-1].payload["bank_root"]
     assert s.expert_store.stats["versions"] >= 4
+
+
+# --------------------------------------------------- read retry budget
+def test_transient_withhold_recovers_within_retry_budget():
+    """A flaky replica set (every node refusing once) is healed by the
+    read retry loop: the fetch succeeds, booking retries + modeled
+    backoff seconds instead of surfacing an error."""
+    net, store = _store(num_nodes=3, replication=3)
+    tree = _tree()
+    man = store.put_version("e", tree, 0)
+    cid = man.chunk_cids[0]
+    net.withhold(cid, transient=1)            # every replica refuses once
+    before = dict(net.stats)
+    data = net.get(cid)
+    assert data is not None
+    assert net.stats["retries"] - before["retries"] >= 1
+    assert net.stats["modeled_backoff_s"] > before["modeled_backoff_s"]
+
+
+def test_retry_budget_exhausted_is_hard_data_unavailable():
+    """A permanent full withhold burns the whole retry budget and then
+    surfaces DataUnavailable (a KeyError, so DA challenges still fire)."""
+    from repro.storage import DataUnavailable
+    net, store = _store(num_nodes=3, replication=3)
+    man = store.put_version("e", _tree(), 0)
+    cid = man.chunk_cids[0]
+    net.withhold(cid)                         # permanent, every replica
+    with pytest.raises(DataUnavailable) as exc:
+        net.get(cid)
+    assert exc.value.retries == net.retry_budget
+    assert isinstance(exc.value, KeyError)
+    assert net.stats["retries"] == net.retry_budget
+    # the booked backoff is the full exponential schedule
+    expect = sum(net.backoff_base_s * 2 ** k
+                 for k in range(net.retry_budget))
+    assert net.stats["modeled_backoff_s"] == pytest.approx(expect)
+    # budget books once per get(): a second attempt doubles the counter
+    with pytest.raises(DataUnavailable):
+        net.get(cid)
+    assert net.stats["retries"] == 2 * net.retry_budget
+
+
+def test_retry_backoff_is_deterministic():
+    """Two identically-seeded networks book identical retry/backoff
+    totals — modeled time, not wall clock."""
+    def run():
+        net, store = _store(num_nodes=3, replication=3, seed=7)
+        man = store.put_version("e", _tree(), 0)
+        net.withhold(man.chunk_cids[0], transient=2)
+        net.get(man.chunk_cids[0])
+        return net.stats["retries"], net.stats["modeled_backoff_s"]
+    assert run() == run()
+
+
+# ------------------------------------------------- node drop vs fetch
+def test_drop_node_with_repair_restores_replication():
+    """Dropping a replica holder mid-run with repair=True re-replicates
+    from the surviving copy — a fetch racing the drop still succeeds and
+    the object is back at full replication on the remaining nodes."""
+    net, store = _store(num_nodes=4, replication=2)
+    tree = _tree()
+    man = store.put_version("e", tree, 0)
+    cid = man.chunk_cids[0]
+    holders = net.replicas(cid)
+    net.drop_node(holders[0], repair=True)
+    assert net.stats["repaired_replicas"] >= 1
+    assert len(net.replicas(cid)) == net.replication
+    back = store.fetch("e", 0, tree)          # fetch after the drop
+    np.testing.assert_array_equal(back["w"], tree["w"])
+
+
+def test_losing_last_replica_is_a_trust_event_not_a_keyerror():
+    """When a drop takes the LAST replica with it the network records a
+    "lost" ReplicaFault + lost_objects tick, and later fetches surface a
+    typed DataUnavailable naming the loss — not an uncaught KeyError
+    from some node's dict."""
+    from repro.storage import DataUnavailable
+    net, store = _store(num_nodes=4, replication=2)
+    man = store.put_version("e", _tree(), 0)
+    cid = man.chunk_cids[0]
+    for node_id in list(net.replicas(cid)):
+        net.drop_node(node_id)                # no repair possible at the end
+    lost = [f for f in net.faults if f.kind == "lost" and f.cid == cid]
+    assert lost, "last-replica loss must surface a trust event"
+    assert net.stats["lost_objects"] >= 1
+    with pytest.raises(DataUnavailable) as exc:
+        net.get(cid)
+    assert "lost" in str(exc.value)
+    # the store layer converts it to its own typed unavailability
+    with pytest.raises(ChunkUnavailableError):
+        store.fetch("e", 0, _tree())
