@@ -1,0 +1,247 @@
+"""KV-paging benchmark: repeated-prefix serving through the chunked
+trust store — the CI gate for prefix-CID KV paging.
+
+A repeated-prefix workload (G groups of S sessions; each group shares
+one long system prompt, every session has a unique tail) is served
+twice by the same seeded engine: paging OFF (the recompute oracle) and
+paging ON (``kv_storage``: sealed prefix-CID blocks, warm-prefix
+restore on admission, DA challenges over the sealed chunks).
+
+Gates (non-zero exit on failure):
+
+- **bit-identity** — the paging-on token streams equal the oracle's;
+- **warm reuse** — every non-leader session restores sealed blocks
+  (``warm_hits > 0``) and its admission-to-first-token distance is
+  strictly below the oracle's recompute TTFT;
+- **dedup** — the store holds each unique block ONCE: sealed blocks
+  equal the analytic unique-block count of the workload (shared prefix
+  counted once + unique suffixes), stored bytes stay within 1.15x of
+  the unique bytes, and the no-dedup baseline is strictly larger;
+- **trust side-band** — on a disjoint-prompt verified trace, every
+  tick commitment's (tick, root, request_ids) is bit-identical to the
+  paging-off oracle (kv_root rides the same append as a side-band),
+  honest verdict maps are equal and all-finalized, and tampering the
+  same session post-serve revokes it in both.
+
+Writes ``BENCH_kv.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.configs import get_config
+from repro.serve.engine import KVStorageConfig, ServingEngine
+from repro.storage import prefix_chain
+from repro.train.loop import init_model
+from repro.trust.protocol import TrustConfig
+
+ARCH = "smollm-360m"
+
+
+def make_prefix_groups(groups, sessions, vocab, *, shared_len, tail_len,
+                       max_new, seed):
+    """Interleaved by group so the G leaders run first (cold) and every
+    later session admits after its group's prefix blocks are sealed."""
+    rng = np.random.default_rng(seed)
+    shared = [rng.integers(0, vocab, shared_len).astype(np.int32)
+              for _ in range(groups)]
+    reqs, sharers = [], []
+    for s in range(sessions):
+        for g in range(groups):
+            rid = len(reqs)
+            tail = rng.integers(0, vocab, tail_len).astype(np.int32)
+            reqs.append({"id": rid,
+                         "prompt": np.concatenate([shared[g], tail]),
+                         "max_new_tokens": max_new})
+            if s > 0:
+                sharers.append(rid)
+    return reqs, sharers
+
+
+def serve(cfg, params, requests, args, *, kv, trust=None):
+    eng = ServingEngine(
+        cfg, params, batch_slots=args.slots, cache_len=args.cache_len,
+        prefill_chunk=args.prefill_chunk, trust=trust,
+        kv_storage=KVStorageConfig(block_tokens=args.block_tokens,
+                                   da_rate=args.da_rate) if kv else None)
+    eng.warmup()
+    eng.submit([dict(r, prompt=r["prompt"].copy()) for r in requests])
+    done = eng.run()
+    meta = eng.request_meta
+    ttft = {r["id"]: meta[r["id"]]["first_token_tick"]
+            - meta[r["id"]]["admitted_tick"] for r in requests}
+    return eng, done, ttft
+
+
+def unique_blocks(requests, done, block_tokens):
+    """Analytic dedup floor: the distinct prefix-CID blocks the whole
+    workload produces (cache row p holds the token FED at p, so a
+    session's fed sequence is prompt + generated[:-1])."""
+    unique, naive = set(), 0
+    for r in requests:
+        fed = np.concatenate([r["prompt"],
+                              np.asarray(done[r["id"]][:-1], np.int64)])
+        chain = prefix_chain(fed, block_tokens)
+        unique.update(chain)
+        naive += len(chain)
+    return len(unique), naive
+
+
+def verdict_run(cfg, params, requests, args, *, kv, tamper_rid=None):
+    trust = TrustConfig(audit_rate=1.0, num_verifiers=1,
+                        challenge_window=args.challenge_window)
+    eng = ServingEngine(
+        cfg, params, batch_slots=args.slots, cache_len=args.cache_len,
+        prefill_chunk=args.prefill_chunk, trust=trust,
+        kv_storage=KVStorageConfig(block_tokens=args.block_tokens)
+        if kv else None)
+    eng.submit([dict(r, prompt=r["prompt"].copy()) for r in requests])
+    while eng._done.keys() != {r["id"] for r in requests} and eng.step():
+        pass
+    if tamper_rid is not None:
+        rec = eng.records[tamper_rid]
+        rec.tokens = [t ^ 1 for t in rec.tokens]
+    done = eng.run()
+    verdicts = {rid: ("revoked" if eng.records[rid].revoked
+                      else "finalized" if rid in done else "open")
+                for rid in sorted(eng.records)}
+    commits = [(tc.tick, tc.root, tc.request_ids)
+               for tc in eng.tick_commitments]
+    kv_roots = [tc.kv_root for tc in eng.tick_commitments]
+    return done, verdicts, commits, kv_roots
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--groups", type=int, default=2)
+    ap.add_argument("--sessions", type=int, default=3,
+                    help="sessions per group (1 leader + warm sharers)")
+    ap.add_argument("--shared-len", type=int, default=32)
+    ap.add_argument("--tail-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--cache-len", type=int, default=96)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--block-tokens", type=int, default=8)
+    ap.add_argument("--da-rate", type=float, default=0.5)
+    ap.add_argument("--dedup-slack", type=float, default=1.15,
+                    help="stored bytes must stay <= unique bytes * slack")
+    ap.add_argument("--challenge-window", type=int, default=60)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="BENCH_kv.json")
+    args = ap.parse_args()
+
+    cfg = get_config(ARCH, smoke=True)
+    params = init_model(cfg, seed=args.seed)
+    requests, sharers = make_prefix_groups(
+        args.groups, args.sessions, cfg.vocab_size,
+        shared_len=args.shared_len, tail_len=args.tail_len,
+        max_new=args.max_new, seed=args.seed)
+
+    # ---- repeated-prefix phase: recompute oracle vs paging on
+    _, done_off, ttft_off = serve(cfg, params, requests, args, kv=False)
+    eng, done_on, ttft_on = serve(cfg, params, requests, args, kv=True)
+    rep = eng.obs_report()["kv"]
+
+    warm_ttft = float(np.mean([ttft_on[r] for r in sharers]))
+    cold_ttft = float(np.mean([ttft_off[r] for r in sharers]))
+    n_unique, n_naive = unique_blocks(requests, done_on, args.block_tokens)
+    bpb = rep["sealed_bytes"] / max(rep["sealed_blocks"], 1)
+    stored_bytes = rep["sealed_bytes"]
+    unique_bytes = n_unique * bpb
+    naive_bytes = n_naive * bpb
+    row("kv.warm_ttft", 0.0,
+        f"warm={warm_ttft:.1f}ticks cold={cold_ttft:.1f}ticks "
+        f"warm_hits={rep['warm_hits']} restored={rep['restored_tokens']}")
+    row("kv.dedup", 0.0,
+        f"stored={stored_bytes}B unique={unique_bytes:.0f}B "
+        f"naive={naive_bytes:.0f}B saved="
+        f"{1 - stored_bytes / max(naive_bytes, 1):.0%}")
+
+    # ---- trust phase: disjoint prompts, commitments must be side-band
+    rng = np.random.default_rng(args.seed + 7)
+    vreqs = [{"id": 100 + i,
+              "prompt": rng.integers(0, cfg.vocab_size, 20 + i)
+              .astype(np.int32),
+              "max_new_tokens": 4} for i in range(4)]
+    tamper_rid = vreqs[1]["id"]
+    vd_off, v_off, commits_off, _ = verdict_run(cfg, params, vreqs, args,
+                                                kv=False)
+    vd_on, v_on, commits_on, kv_roots = verdict_run(cfg, params, vreqs,
+                                                    args, kv=True)
+    _, t_off, _, _ = verdict_run(cfg, params, vreqs, args, kv=False,
+                                 tamper_rid=tamper_rid)
+    _, t_on, _, _ = verdict_run(cfg, params, vreqs, args, kv=True,
+                                tamper_rid=tamper_rid)
+
+    out = {
+        "workload": {"arch": ARCH, "groups": args.groups,
+                     "sessions": args.sessions,
+                     "shared_len": args.shared_len,
+                     "tail_len": args.tail_len, "max_new": args.max_new,
+                     "slots": args.slots, "cache_len": args.cache_len,
+                     "prefill_chunk": args.prefill_chunk,
+                     "block_tokens": args.block_tokens,
+                     "da_rate": args.da_rate, "seed": args.seed},
+        "kv": {k: v for k, v in rep.items()
+               if not isinstance(v, dict)},
+        "da": rep.get("da"),
+        "ttft_ticks": {"warm": warm_ttft, "recompute": cold_ttft},
+        "dedup": {"stored_bytes": stored_bytes,
+                  "unique_bytes": unique_bytes,
+                  "naive_bytes": naive_bytes,
+                  "unique_blocks": n_unique, "naive_blocks": n_naive},
+        "streams_equal": done_on == done_off,
+        "trust": {
+            "verdicts_equal": v_on == v_off,
+            "honest_all_finalized": all(v == "finalized"
+                                        for v in v_on.values()),
+            "commitments_equal": commits_on == commits_off,
+            "kv_root_side_band": any(r != "" for r in kv_roots),
+            "tamper_caught_both": t_on.get(tamper_rid) == "revoked"
+            and t_off.get(tamper_rid) == "revoked",
+            "verified_streams_equal": vd_on == vd_off,
+        },
+    }
+    with open(args.json, "w") as f:
+        json.dump(out, f, indent=2)
+
+    failures = []
+    if not out["streams_equal"]:
+        failures.append("paging-on token streams differ from the oracle")
+    if rep["warm_hits"] <= 0:
+        failures.append("no warm hits on a repeated-prefix workload")
+    if not warm_ttft < cold_ttft:
+        failures.append(f"warm TTFT {warm_ttft:.1f} not below recompute "
+                        f"TTFT {cold_ttft:.1f}")
+    if rep["sealed_blocks"] != n_unique:
+        failures.append(f"{rep['sealed_blocks']} blocks stored, "
+                        f"{n_unique} unique in the workload")
+    if stored_bytes > unique_bytes * args.dedup_slack:
+        failures.append(f"stored {stored_bytes}B exceeds unique "
+                        f"{unique_bytes:.0f}B x {args.dedup_slack}")
+    if not naive_bytes > stored_bytes:
+        failures.append("no cross-session dedup (naive == stored)")
+    for key in ("verdicts_equal", "honest_all_finalized",
+                "commitments_equal", "kv_root_side_band",
+                "tamper_caught_both", "verified_streams_equal"):
+        if not out["trust"][key]:
+            failures.append(f"trust gate failed: {key}")
+    if failures:
+        for msg in failures:
+            print(f"[kv-bench] GATE FAILED: {msg}", file=sys.stderr)
+        return 1
+    print(f"[kv-bench] ok: warm TTFT {warm_ttft:.1f} vs recompute "
+          f"{cold_ttft:.1f} ticks, {rep['warm_hits']} warm hits, "
+          f"dedup saved {1 - stored_bytes / max(naive_bytes, 1):.0%} "
+          f"-> {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

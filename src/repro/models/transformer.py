@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import moe as moe_lib
 from repro.models import rglru as rglru_lib
@@ -105,6 +106,48 @@ def cache_decl(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
         decl["remainder"] = [_layer_cache_decl(s, cfg, batch, cache_len)
                              for s in cfg.remainder]
     return decl
+
+
+# ------------------------------------------- block-granular KV paging
+def check_kv_pageable(cfg: ModelConfig) -> None:
+    """KV paging (``repro.storage.kv``) addresses cache ROWS by absolute
+    position, which only the full-attention cache layout guarantees:
+    local_attn caches are capped ring windows and rglru/ssm carry
+    recurrent state that is not row-addressable.  Raises for those."""
+    for spec in list(cfg.block_pattern) + list(cfg.remainder):
+        if spec.kind != "attn":
+            raise ValueError(
+                f"kv_storage needs all-'attn' layers (row-addressable "
+                f"caches); config has a {spec.kind!r} layer")
+
+
+def slice_kv_block(caches, slot: int, start: int, end: int) -> dict:
+    """Copy one slot's cache rows [start, end) out of every layer's KV
+    leaves, as host numpy arrays — the pytree a sealed KV block stores.
+    Stacked block caches carry a leading layer axis (batch is axis 1);
+    remainder caches lead with batch."""
+    block = {"blocks": jax.tree_util.tree_map(
+        lambda a: np.asarray(a[:, slot, start:end]), caches["blocks"])}
+    if "remainder" in caches:
+        block["remainder"] = jax.tree_util.tree_map(
+            lambda a: np.asarray(a[slot, start:end]),
+            caches["remainder"])
+    return block
+
+
+def restore_kv_block(caches, slot: int, start: int, block: dict) -> dict:
+    """Functional inverse of ``slice_kv_block``: write a fetched block's
+    rows back into one slot at ``start``.  Returns the new cache tree."""
+    new = {"blocks": jax.tree_util.tree_map(
+        lambda a, b: a.at[:, slot, start:start + b.shape[1]].set(
+            jnp.asarray(b, a.dtype)),
+        caches["blocks"], block["blocks"])}
+    if "remainder" in caches:
+        new["remainder"] = jax.tree_util.tree_map(
+            lambda a, b: a.at[slot, start:start + b.shape[0]].set(
+                jnp.asarray(b, a.dtype)),
+            caches["remainder"], block["remainder"])
+    return new
 
 
 # ------------------------------------------------------------- apply

@@ -50,15 +50,18 @@ from repro.obs.metrics import MetricsRegistry
 from repro.serve.scheduler import SlotScheduler, SlotState
 from repro.storage import (ExpertCache, ExpertStore, GateEMA,
                            StorageNetwork)
+from repro.storage.kv import (KV_GENESIS, KVBlockStore, KVStorageConfig,
+                              prefix_chain, prefix_cid)
 from repro.train.step import make_serve_chunk_step
 from repro.trust.audit import VerifierPool
 from repro.trust.commitments import MerkleTree, RoundCommitment, leaf_digest
+from repro.trust.da import DataAvailabilityAuditor
 from repro.trust.protocol import ChallengeWindow, TrustConfig
 from repro.trust.session import (SessionLeafRef, TickCommitment, commit_tick,
                                  verify_session_inclusion)
 
-__all__ = ["EdgeStorageConfig", "ServingEngine", "SessionRecord",
-           "SlotState"]
+__all__ = ["EdgeStorageConfig", "KVStorageConfig", "ServingEngine",
+           "SessionRecord", "SlotState"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,6 +177,52 @@ class _EdgeExpertRuntime:
                 "ticks": self.ticks}
 
 
+class _KVRuntime:
+    """The engine's KV-paging sidecar: a ``KVBlockStore`` over either
+    its own storage network or — when the edge expert runtime is also
+    configured — the SAME store and cache as the expert weights, so KV
+    blocks and experts compete under one byte budget and one LRU
+    (experts are pinned while activated; cold KV evicts first).
+
+    ``da_rate > 0`` adds data-availability challenges over the sealed
+    KV chunks: the same corrupt-slash-repair / withhold-window-slash
+    machinery that audits expert chunks (``repro.trust.da``)."""
+
+    def __init__(self, kcfg: KVStorageConfig, shared=None,
+                 metrics: Optional[MetricsRegistry] = None):
+        self.cfg = kcfg
+        self.T = int(kcfg.block_tokens)
+        if self.T < 1:
+            raise ValueError(f"block_tokens {self.T} < 1")
+        if shared is not None:
+            self.store, self.cache = shared
+            self.network = self.store.network
+        else:
+            self.network = StorageNetwork(num_nodes=kcfg.num_nodes,
+                                          replication=kcfg.replication,
+                                          seed=kcfg.seed, metrics=metrics,
+                                          namespace="kv.network")
+            self.store = ExpertStore(self.network,
+                                     chunk_bytes=kcfg.chunk_bytes,
+                                     metrics=metrics, namespace="kv.store")
+            self.cache = ExpertCache(self.store, kcfg.cache_bytes,
+                                     metrics=metrics, namespace="kv.cache")
+        self.kv = KVBlockStore(self.store, self.cache, metrics=metrics)
+        self.da = (DataAvailabilityAuditor(
+            self.network, len(self.network.nodes), window=kcfg.da_window,
+            sample_rate=kcfg.da_rate, seed=kcfg.seed, metrics=metrics,
+            namespace="kv.da") if kcfg.da_rate > 0 else None)
+        self.like = None                # block-structure template (lazy)
+
+    def report(self) -> Dict:
+        out = {**dict(self.kv.stats),
+               "cache": dict(self.cache.stats),
+               "store": dict(self.store.stats)}
+        if self.da is not None:
+            out["da"] = dict(self.da.stats)
+        return out
+
+
 def _tick_leaf(request_id: int, tick: int, token: int) -> str:
     """Leaf digest of one committed engine tick.  The (1, 3) row layout
     matches ``RoundCommitment.leaf_chunk`` for a one-tick-per-leaf
@@ -228,6 +277,7 @@ class ServingEngine:
                  scheduling: str = "continuous", prefill_chunk: int = 16,
                  trust: Optional[TrustConfig] = None,
                  expert_storage: Optional[EdgeStorageConfig] = None,
+                 kv_storage: Optional[KVStorageConfig] = None,
                  obs: Optional[Observability] = None):
         if cfg.is_encoder_decoder:
             raise NotImplementedError("engine drives decoder-only archs")
@@ -253,6 +303,27 @@ class ServingEngine:
                 raise ValueError("expert_storage needs a MoE model")
             self.edge = _EdgeExpertRuntime(cfg, params, expert_storage,
                                            metrics=self.obs.metrics)
+        # ---- KV paging through the chunked store: sealed prefix-CID
+        # blocks, warm-prefix restore on admission, page-out/resume.
+        # With BOTH runtimes on, KV shares the edge cache+store — the
+        # single-byte-budget competition between KV and expert weights.
+        self.kvrt = None
+        if kv_storage is not None:
+            tfm.check_kv_pageable(cfg)
+            if cache_len - 1 < kv_storage.block_tokens:
+                raise ValueError(
+                    f"block_tokens {kv_storage.block_tokens} cannot fit "
+                    f"cache_len {cache_len} (need <= cache_len - 1)")
+            shared = ((self.edge.store, self.edge.cache)
+                      if self.edge is not None else None)
+            self.kvrt = _KVRuntime(kv_storage, shared=shared,
+                                   metrics=self.obs.metrics)
+        # per-slot prefix-chain cursor: {"prev": cid, "sealed": nblocks}
+        self._kv_chain: List[Optional[Dict]] = [None] * batch_slots
+        # paged-out requests awaiting readmission: rid -> resume state
+        self._kv_resume: Dict[int, Dict] = {}
+        self._pending_kv_roots: List[str] = []   # sealed, not yet committed
+        self._kv_macro_cids: List[str] = []      # sealed this macro-step
         # ONE compiled fused step: C engine ticks per call (C=1 pure
         # decode up to C=prefill_chunk while prompts are chunking), fixed
         # (B, C) shapes per pow2 width bucket (jax.jit's shape cache) —
@@ -368,10 +439,16 @@ class ServingEngine:
         if not admitted:
             return
         self._reset_slot_caches([i for i, _ in admitted])
+        if self.kvrt is not None:
+            for i, slot in admitted:
+                self._kv_on_admit(i, slot)
         if self.verified:
             for _, slot in admitted:
                 rid = slot.request_id
-                self.records[rid] = SessionRecord(request_id=rid)
+                # a paged-out-then-readmitted session keeps its record:
+                # its commitment stream continues where it left off
+                if rid not in self.records:
+                    self.records[rid] = SessionRecord(request_id=rid)
                 self._open_sessions.add(rid)
 
     def _reset_slot_caches(self, idxs: List[int]) -> None:
@@ -396,6 +473,146 @@ class ServingEngine:
             new["remainder"] = jax.tree_util.tree_map(
                 zero_rows(0), self.caches["remainder"])
         self.caches = new
+
+    # ------------------------------------------------------- KV paging
+    def _kv_template(self):
+        """Structure-only template for ``assemble_tree`` (leaf shapes
+        come from the manifest, only the treedef must match)."""
+        if self.kvrt.like is None:
+            self.kvrt.like = tfm.slice_kv_block(self.caches, 0, 0, 1)
+        return self.kvrt.like
+
+    @staticmethod
+    def _fed_tokens(s: SlotState, a: int, b: int) -> np.ndarray:
+        """Token ids FED at cache positions [a, b): the prompt up to its
+        length, then the generated continuation (cache row p holds the
+        KV of the token fed at position p — a pure function of the
+        token prefix, which is what makes prefix-CID addressing
+        sound)."""
+        L = len(s.prompt)
+        out = np.empty(b - a, np.int64)
+        for j, p in enumerate(range(a, b)):
+            out[j] = int(s.prompt[p]) if p < L else s.generated[p - L]
+        return out
+
+    def _kv_on_admit(self, index: int, slot: SlotState) -> None:
+        """Admission-side restore: a readmitted paged-out request gets
+        its exact sealed state back; a fresh request whose leading
+        prompt blocks are already sealed (another session shared the
+        prefix) restores them instead of recomputing prefill.  At least
+        one prompt token is always left unconsumed — the first
+        generated token comes from feeding the LAST prompt token."""
+        kv, T = self.kvrt.kv, self.kvrt.T
+        rid = slot.request_id
+        res = self._kv_resume.pop(rid, None)
+        if res is not None:
+            for cid, a, b in res["cids"]:
+                block = kv.fetch(cid, self._kv_template())
+                self.caches = tfm.restore_kv_block(self.caches, index,
+                                                   a, block)
+            slot.pos, slot.cursor = res["pos"], res["cursor"]
+            slot.generated = list(res["generated"])
+            self._kv_chain[index] = {"prev": res["prev"],
+                                     "sealed": res["sealed"]}
+            kv.stats["resumes"] += 1
+            kv.stats["restored_tokens"] += slot.pos
+            return
+        chain = prefix_chain(slot.prompt, T)
+        # restorable blocks must end strictly inside the prompt
+        restorable = chain[:max(0, (len(slot.prompt) - 1) // T)]
+        n = kv.warm_prefix(restorable) if restorable else 0
+        for b in range(n):
+            block = kv.fetch(chain[b], self._kv_template())
+            self.caches = tfm.restore_kv_block(self.caches, index,
+                                               b * T, block)
+        slot.pos = slot.cursor = n * T
+        self._kv_chain[index] = {"prev": chain[n - 1] if n else KV_GENESIS,
+                                 "sealed": n}
+        if n:
+            kv.stats["restored_tokens"] += n * T
+
+    def _kv_seal_upto(self, index: int, s: SlotState) -> None:
+        """Seal every full block the slot's fed sequence has crossed.
+        The compiled chunk already wrote these rows (cache rows are
+        write-once), so slicing the post-chunk cache at any replay tick
+        past the block boundary reads exactly what that tick held.  A
+        CID another session already sealed dedups without slicing."""
+        st, kv, T = self._kv_chain[index], self.kvrt.kv, self.kvrt.T
+        while (st["sealed"] + 1) * T <= s.pos:
+            b = st["sealed"]
+            cid = prefix_cid(st["prev"],
+                             self._fed_tokens(s, b * T, (b + 1) * T))
+            if cid in kv:
+                man = kv.seal(cid, None, 0)
+            else:
+                block = tfm.slice_kv_block(self.caches, index,
+                                           b * T, (b + 1) * T)
+                man = kv.seal(cid, block, T)
+            st["prev"], st["sealed"] = cid, b + 1
+            if self.verified:
+                self._pending_kv_roots.append(man.root)
+            self._kv_macro_cids.append(cid)
+
+    def _kv_prefetch_queued(self) -> None:
+        """Warm the cache with queued requests' sealed prefix blocks —
+        issued right after the fused chunk dispatch, so the fetch
+        overlaps co-batched decode the way ``GateEMA`` prefetch
+        overlaps expert fetch.  Prefetch never evicts residents."""
+        kv, T = self.kvrt.kv, self.kvrt.T
+        for r in list(self.sched.queue)[:self.batch]:
+            if r["id"] in self._kv_resume:
+                continue                 # resume fetches exact blocks
+            chain = prefix_chain(r["prompt"], T)
+            run = []
+            for cid in chain[:max(0, (len(r["prompt"]) - 1) // T)]:
+                if cid not in kv:
+                    break
+                run.append(KVBlockStore.object_id(cid))
+            if run:
+                self.kvrt.cache.prefetch(run, 0,
+                                         lambda oid: self._kv_template())
+
+    def page_out(self, index: int) -> int:
+        """Page a running slot's KV out of the compute cache: seal its
+        full blocks plus the partial tail block to the chunked store,
+        stash the resume cursor, and requeue the request at the queue
+        FRONT.  Readmission (``_kv_on_admit``) restores the rows and
+        the slot resumes decode bit-identically.  Returns the request
+        id."""
+        if self.kvrt is None:
+            raise ValueError("engine was not started with kv_storage")
+        s = self.sched.slots[index]
+        if not s.active:
+            raise ValueError(f"slot {index} is not active")
+        kv, T = self.kvrt.kv, self.kvrt.T
+        self._kv_seal_upto(index, s)     # normally already sealed
+        st = self._kv_chain[index]
+        nfull, prev = st["sealed"], st["prev"]
+        entries = []
+        chain_prev = KV_GENESIS
+        for b in range(nfull):
+            chain_prev = prefix_cid(chain_prev,
+                                    self._fed_tokens(s, b * T, (b + 1) * T))
+            entries.append((chain_prev, b * T, (b + 1) * T))
+        if s.pos > nfull * T:
+            # tail block: chained over its (shorter) token run — the
+            # int64 encoding binds the count, so it can never collide
+            # with the full block over the same prefix
+            tail_cid = prefix_cid(prev,
+                                  self._fed_tokens(s, nfull * T, s.pos))
+            block = tfm.slice_kv_block(self.caches, index, nfull * T, s.pos)
+            man = kv.seal(tail_cid, block, s.pos - nfull * T)
+            if self.verified:
+                self._pending_kv_roots.append(man.root)
+            entries.append((tail_cid, nfull * T, s.pos))
+        self._kv_resume[s.request_id] = {
+            "pos": s.pos, "cursor": s.cursor,
+            "generated": list(s.generated),
+            "cids": entries, "prev": prev, "sealed": nfull}
+        kv.stats["pageouts"] += 1
+        rid = self.sched.preempt(index, self.tick)
+        self._kv_chain[index] = None
+        return rid
 
     # --------------------------------------------------------- emissions
     def _emit(self, slot: SlotState, token: int, lat_s: float) -> None:
@@ -518,6 +735,11 @@ class ServingEngine:
             # resolve the chunk's activated experts through the edge
             # cache (cold: chunk fetches; warm: hits) + EMA prefetch
             self.edge.on_tick(np.asarray(stats))
+        if self.kvrt is not None:
+            # overlap with the chunk just dispatched: warm queued
+            # requests' sealed prefix blocks into the cache
+            self._kv_macro_cids = []
+            self._kv_prefetch_queued()
         lat = sp.dur_s / C
 
         # ---- replay the chunk host-side, one engine tick per micro-step
@@ -540,6 +762,14 @@ class ServingEngine:
                     self._emit(s, tok, lat)
                     emissions.append((i, s.request_id, tok))
                     s.pos += 1
+            if self.kvrt is not None:
+                # seal the blocks this tick completed (prefill AND
+                # decode rows page through the same chain), BEFORE the
+                # commit so their manifest roots ride this tick's
+                # on-chain append
+                for i, s in enumerate(slots):
+                    if s.active:
+                        self._kv_seal_upto(i, s)
             if self.verified and emissions:
                 self._commit_tick(emissions)
             for i, s in enumerate(slots):
@@ -551,17 +781,32 @@ class ServingEngine:
                     self._finish(i)
             if self.verified:
                 self._expire_windows()
+        if self.kvrt is not None and self.kvrt.da is not None \
+                and self._kv_macro_cids:
+            # DA challenges over the KV chunks sealed this macro-step:
+            # replica nodes answer for sealed KV exactly like expert
+            # chunks (corrupt -> slash + repair; withheld -> window)
+            seen = sorted(set(self._kv_macro_cids))
+            self.kvrt.da.challenge_round(self.tick,
+                                         self.kvrt.kv.manifests(seen))
+            self.kvrt.da.resolve(self.tick)
         return True
 
     def _commit_tick(self, emissions: List[Tuple[int, int, int]]) -> None:
         """One Merkle append for the whole batch tick: a tree over every
         token emitted this tick (slot order); each session stores its
-        inclusion path into it."""
+        inclusion path into it.  KV-block manifest roots sealed since
+        the last append ride along as the side-band ``kv_root`` (a
+        prefill tick can seal without emitting, so pending roots carry
+        forward); the token ``root`` is untouched — streams and
+        verdicts stay bit-identical to paging-off."""
         with self.obs.span("commit", metric="serve.commit_s",
                            tick=self.tick, leaves=len(emissions)):
             entries = [(rid, self.records[rid].leaves[-1])
                        for _, rid, _ in emissions]
-            tc, refs = commit_tick(self.tick, entries)
+            tc, refs = commit_tick(self.tick, entries,
+                                   kv_roots=self._pending_kv_roots)
+            self._pending_kv_roots = []
             self.tick_commitments.append(tc)
             for rid, ref in refs.items():
                 self.records[rid].refs.append(ref)
@@ -603,6 +848,8 @@ class ServingEngine:
         }
         if self.edge is not None:
             out["edge"] = self.edge.report()
+        if self.kvrt is not None:
+            out["kv"] = self.kvrt.report()
         return out
 
     def report(self) -> Dict:

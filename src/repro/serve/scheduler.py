@@ -125,6 +125,23 @@ class SlotScheduler:
         slot.request_id = -1
         return rid
 
+    def preempt(self, index: int, tick: int) -> int:
+        """Page a RUNNING slot out: free the slot and requeue its
+        request at the queue FRONT, so it resumes before newly queued
+        work.  The engine owns the resume state (cache rows sealed to
+        the KV store, generated tokens, positions) — the scheduler only
+        re-enqueues the original request.  Returns the request id."""
+        slot = self.slots[index]
+        if not slot.active:
+            raise ValueError(f"slot {index} is not active")
+        rid = slot.request_id
+        self.queue.appendleft({"id": rid, "prompt": slot.prompt,
+                               "max_new_tokens": slot.to_generate})
+        meta = self.meta[rid]
+        meta["preemptions"] = meta.get("preemptions", 0) + 1
+        slot.request_id = -1
+        return rid
+
     # ------------------------------------------------------------- views
     @property
     def num_slots(self) -> int:

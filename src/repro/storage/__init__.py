@@ -13,12 +13,17 @@
 - ``cache``: ``ExpertCache`` — the edge device's bounded-byte LRU of
   deserialized experts (pin-while-activated, hit/miss/evict/byte
   counters) with ``GateEMA`` gate-statistics-driven prefetch.
+- ``kv``: ``KVBlockStore`` — sealed serving KV blocks addressed by
+  prefix-hash CIDs, paged through the same store/cache machinery
+  (cross-session prefix dedup, single byte budget with experts).
 """
 from repro.storage.cache import ExpertCache, GateEMA
 from repro.storage.chunks import (DEFAULT_CHUNK_BYTES, ChunkManifest,
                                   LeafSpec, assemble_tree, build_manifest,
                                   deserialize_tree, serialize_tree,
                                   split_chunks)
+from repro.storage.kv import (KV_GENESIS, KVBlockStore, KVStorageConfig,
+                              prefix_chain, prefix_cid)
 from repro.storage.network import (DataUnavailable, NetworkCostModel,
                                    ReplicaFault, StorageNetwork, StorageNode)
 from repro.storage.store import ChunkUnavailableError, ExpertStore
@@ -27,6 +32,8 @@ __all__ = [
     "ExpertCache", "GateEMA",
     "DEFAULT_CHUNK_BYTES", "ChunkManifest", "LeafSpec", "assemble_tree",
     "build_manifest", "deserialize_tree", "serialize_tree", "split_chunks",
+    "KV_GENESIS", "KVBlockStore", "KVStorageConfig", "prefix_chain",
+    "prefix_cid",
     "DataUnavailable", "NetworkCostModel", "ReplicaFault", "StorageNetwork",
     "StorageNode", "ChunkUnavailableError", "ExpertStore",
 ]

@@ -134,6 +134,12 @@ class ExpertStore:
     def objects(self) -> List[str]:
         return sorted(self._versions)
 
+    def contains(self, object_id: str, version: int = 0) -> bool:
+        """Whether some manifest serves ``version`` of the object — the
+        non-raising probe behind warm-prefix detection."""
+        return any(v <= version
+                   for v, _ in self._versions.get(object_id, []))
+
     def manifest_cid(self, object_id: str, version: int) -> str:
         """CID of the manifest serving ``version``: the newest one
         tagged at or before it."""

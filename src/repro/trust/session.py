@@ -42,26 +42,37 @@ class SessionLeafRef:
 @dataclasses.dataclass(frozen=True)
 class TickCommitment:
     """What one batch tick appends on-chain: a single root over every
-    token emitted that tick (slot order), plus which sessions it binds."""
+    token emitted that tick (slot order), plus which sessions it binds.
+
+    ``kv_root`` is a side-band commitment over the KV-block manifest
+    roots the engine sealed since the previous append (KV paging on;
+    ``""`` otherwise).  It rides the same on-chain object but is NOT
+    folded into the token ``root`` — token streams and their audit
+    verdicts stay bit-identical with paging on or off."""
     tick: int
     root: str
     request_ids: Tuple[int, ...]
+    kv_root: str = ""
 
     @property
     def num_leaves(self) -> int:
         return len(self.request_ids)
 
 
-def commit_tick(tick: int, entries: Sequence[Tuple[int, str]]
+def commit_tick(tick: int, entries: Sequence[Tuple[int, str]],
+                kv_roots: Sequence[str] = ()
                 ) -> Tuple[TickCommitment, Dict[int, SessionLeafRef]]:
     """Build the batch-tick commitment.
 
     ``entries``: the tick's emissions in slot order, ``(request_id,
     leaf_digest)`` — one per stream that produced a token this tick (a
     stream emits at most one token per tick, so request ids are unique
-    within an entry list).  Returns the tick commitment (one on-chain
-    append for the whole batch) and each session's inclusion reference
-    into it."""
+    within an entry list).  ``kv_roots``: manifest roots of the KV
+    blocks sealed since the last append, committed under one Merkle
+    root in ``kv_root`` (prefill ticks can seal without emitting, so
+    the engine carries pending roots to the next commit).  Returns the
+    tick commitment (one on-chain append for the whole batch) and each
+    session's inclusion reference into it."""
     if not entries:
         raise ValueError("commit_tick needs at least one emission")
     rids = [rid for rid, _ in entries]
@@ -71,8 +82,9 @@ def commit_tick(tick: int, entries: Sequence[Tuple[int, str]]
     refs = {rid: SessionLeafRef(tick=tick, root=tree.root,
                                 path=tree.prove(i))
             for i, (rid, _) in enumerate(entries)}
+    kv_root = MerkleTree(list(kv_roots)).root if kv_roots else ""
     return TickCommitment(tick=tick, root=tree.root,
-                          request_ids=tuple(rids)), refs
+                          request_ids=tuple(rids), kv_root=kv_root), refs
 
 
 def verify_session_inclusion(leaves: Sequence[str],

@@ -270,6 +270,94 @@ def store_unit_bytes(rep):
     return rep["store"]["uploaded_bytes"] // max(rep["units"], 1)
 
 
+def test_kv_blocks_and_experts_compete_under_one_budget():
+    """KV blocks resolved through the SAME cache as expert weights:
+    under a tight budget the cold KV entries are evicted first while the
+    pinned (activated) expert survives — with exact counters."""
+    import jax.numpy as jnp
+
+    from repro.models.builder import materialize
+    from repro.models.transformer import cache_decl, slice_kv_block
+    from repro.storage import KVBlockStore, prefix_chain
+
+    net, store, trees = _populated_store(num_objects=1, leaf=256)
+    nbytes = 4 * 256                                  # one expert unit
+    from repro.configs import get_config
+    cfg = get_config("smollm-360m", smoke=True)
+    caches = jax.tree_util.tree_map(
+        jnp.asarray, materialize(cache_decl(cfg, 1, 40),
+                                 jax.random.PRNGKey(0)))
+    blocks = [slice_kv_block(caches, 0, b * 8, (b + 1) * 8)
+              for b in range(3)]
+    kv_bytes = sum(np.asarray(a).nbytes
+                   for a in jax.tree_util.tree_leaves(blocks[0]))
+
+    cache = ExpertCache(store, budget_bytes=nbytes + 2 * kv_bytes)
+    kv = KVBlockStore(store, cache)
+    chain = prefix_chain(np.arange(24), 8)
+    for cid, block in zip(chain, blocks):
+        kv.seal(cid, block, 8)
+    like = slice_kv_block(caches, 0, 0, 1)
+    expert = cache.get("o0", 0, trees["o0"])          # the activated expert
+    np.testing.assert_array_equal(expert["w"], trees["o0"]["w"])
+    cache.pin(["o0"])
+    try:
+        for cid in chain:                             # 3 blocks, room for 2
+            kv.fetch(cid, like)
+    finally:
+        cache.unpin(["o0"])
+    assert "o0" in cache                              # pinned: survived
+    oid = KVBlockStore.object_id
+    assert oid(chain[0]) not in cache                 # cold KV went first
+    assert oid(chain[1]) in cache and oid(chain[2]) in cache
+    assert cache.stats["evictions"] == 1
+    assert cache.stats["evicted_bytes"] == kv_bytes
+    assert cache.resident_bytes == nbytes + 2 * kv_bytes
+
+
+def test_serving_engine_shared_budget_kv_and_experts_identical_outputs():
+    """An engine running BOTH runtimes shares one store/cache (one byte
+    budget); a budget tight enough to force evictions changes nothing
+    about the streams."""
+    from repro.configs import get_config
+    from repro.data.synthetic import serving_requests
+    from repro.serve.engine import (EdgeStorageConfig, KVStorageConfig,
+                                    ServingEngine)
+    from repro.train.loop import init_model
+    cfg = get_config("qwen2-moe-a2.7b", smoke=True)
+    cfg = dataclasses.replace(cfg, padded_num_experts=0)
+    params = init_model(cfg, seed=0)
+    reqs = list(serving_requests(cfg.vocab_size, 4, max_prompt=6,
+                                 max_new=4, seed=0))
+
+    plain = ServingEngine(cfg, params, batch_slots=2, cache_len=32)
+    plain.submit([dict(r) for r in reqs])
+    done_plain = plain.run()
+
+    def shared(cache_bytes):
+        eng = ServingEngine(
+            cfg, params, batch_slots=2, cache_len=32,
+            expert_storage=EdgeStorageConfig(cache_bytes=cache_bytes),
+            kv_storage=KVStorageConfig(block_tokens=4))
+        assert eng.kvrt.cache is eng.edge.cache       # ONE budget
+        assert eng.kvrt.store is eng.edge.store
+        eng.submit([dict(r) for r in reqs])
+        return eng, eng.run()
+
+    eng, done = shared(cache_bytes=None)
+    assert done == done_plain
+    rep = eng.obs_report()["kv"]
+    assert rep["sealed_blocks"] > 0
+    # KV objects live in the same store namespace as the experts
+    assert any(o.startswith("kv/") for o in eng.edge.store.objects())
+    assert any(o.startswith("moe/") for o in eng.edge.store.objects())
+
+    tight, done_tight = shared(cache_bytes=eng.edge.cache.resident_bytes
+                               // 2)
+    assert done_tight == done_plain                   # thrash, not wrong
+    assert tight.edge.cache.stats["evictions"] > 0
+
+
 def test_gate_ema_ranking_deterministic_ties_by_id():
     ema = GateEMA(4, decay=0.9)
     ema.update([1, 1, 1, 1])

@@ -34,6 +34,35 @@ def test_int8_decode_matches_forward():
     assert kb.dtype.itemsize == 1
 
 
+def test_int8_sealed_kv_blocks_halve_chunk_payload():
+    """Paging the quantized cache pays off on the wire: an int8 sealed
+    block's chunk payload is less than half the fp32 block's (int8 K/V
+    rows plus small f32 scale rows vs f32 rows)."""
+    import numpy as np
+
+    from repro.models.transformer import slice_kv_block
+    from repro.storage import (KV_GENESIS, ExpertCache, ExpertStore,
+                               KVBlockStore, StorageNetwork, prefix_cid)
+
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    key = jax.random.PRNGKey(0)
+    sizes = {}
+    for name, c in (("fp32", cfg),
+                    ("int8", dataclasses.replace(cfg,
+                                                 kv_cache_dtype="int8"))):
+        caches = materialize(cache_decl(c, 1, 32), key)
+        block = slice_kv_block(caches, 0, 0, 16)
+        net = StorageNetwork(num_nodes=2, replication=1, seed=0)
+        store = ExpertStore(net, chunk_bytes=1 << 12)
+        kv = KVBlockStore(store, ExpertCache(store, None))
+        man = kv.seal(prefix_cid(KV_GENESIS, np.arange(16)), block, 16)
+        sizes[name] = man.total_bytes
+        assert kv.stats["sealed_bytes"] == man.total_bytes
+    assert 2 * sizes["int8"] <= sizes["fp32"]
+    # ...but not a free 4x: the f32 scale rows ride along in the block
+    assert 4 * sizes["int8"] > sizes["fp32"]
+
+
 def test_int8_window_cache():
     cfg = dataclasses.replace(get_config("gemma3-27b", smoke=True),
                               kv_cache_dtype="int8")

@@ -1,0 +1,217 @@
+"""KV-block storage: seal -> chunk -> put -> fetch -> restore must be
+bit-identical (fp32 AND int8, scales included), and prefix-hash CID
+chaining must dedup equal prefixes while diverging from the first
+differing block on.
+
+Property tests run under hypothesis when installed (see requirements-
+dev.txt); deterministic seeded variants of every property always run.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models.builder import materialize
+from repro.models.transformer import (cache_decl, check_kv_pageable,
+                                      restore_kv_block, slice_kv_block)
+from repro.storage import (KV_GENESIS, ExpertCache, ExpertStore,
+                           KVBlockStore, StorageNetwork, prefix_chain,
+                           prefix_cid)
+
+ARCH = "smollm-360m"
+
+
+# ------------------------------------------------------------ fixtures
+def _kv_store(chunk_bytes=1 << 12, seed=0):
+    net = StorageNetwork(num_nodes=4, replication=2, seed=seed)
+    store = ExpertStore(net, chunk_bytes=chunk_bytes)
+    return KVBlockStore(store, ExpertCache(store, None))
+
+
+def _random_caches(cfg, batch, cache_len, seed=0):
+    """A materialized decode cache with every leaf filled with random
+    values of its own dtype (int8 K/V rows + f32 scale rows under
+    ``kv_cache_dtype="int8"``)."""
+    caches = materialize(cache_decl(cfg, batch, cache_len),
+                         jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+
+    def fill(a):
+        a = np.asarray(a)
+        if np.issubdtype(a.dtype, np.integer):
+            return rng.integers(-127, 128, a.shape).astype(a.dtype)
+        return rng.normal(size=a.shape).astype(a.dtype)
+
+    return jax.tree_util.tree_map(lambda a: jnp.asarray(fill(a)), caches)
+
+
+def _assert_trees_equal(a, b):
+    la = jax.tree_util.tree_leaves_with_path(a)
+    lb = {jax.tree_util.keystr(k): v
+          for k, v in jax.tree_util.tree_leaves_with_path(b)}
+    assert len(la) == len(lb)
+    for k, x in la:
+        y = lb[jax.tree_util.keystr(k)]
+        assert np.asarray(x).dtype == np.asarray(y).dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------- seal/fetch round trip
+@pytest.mark.parametrize("kv_dtype", ["fp32", "int8"])
+def test_seal_fetch_restore_round_trip_bit_identical(kv_dtype):
+    """A sealed block survives chunking, the replicated network, and
+    cache-mediated fetch bit-for-bit — including the int8 scale leaves —
+    and restores into exactly the rows it was sliced from."""
+    cfg = get_config(ARCH, smoke=True)
+    if kv_dtype == "int8":
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    caches = _random_caches(cfg, batch=2, cache_len=24, seed=3)
+    block = slice_kv_block(caches, slot=1, start=4, end=12)
+    if kv_dtype == "int8":
+        ks = {jax.tree_util.keystr(k)
+              for k, _ in jax.tree_util.tree_leaves_with_path(block)}
+        assert any("k_scale" in k for k in ks)       # scales ride along
+        assert any(np.asarray(v).dtype == np.int8
+                   for _, v in jax.tree_util.tree_leaves_with_path(block))
+
+    kv = _kv_store()
+    cid = prefix_cid(KV_GENESIS, np.arange(8))
+    man = kv.seal(cid, block, 8)
+    assert cid in kv and man.total_bytes > 0
+    like = slice_kv_block(caches, 0, 0, 1)           # structure-only
+    back = kv.fetch(cid, like)
+    _assert_trees_equal(block, back)
+
+    zeros = materialize(cache_decl(cfg, 2, 24), jax.random.PRNGKey(0))
+    restored = restore_kv_block(zeros, 1, 4, back)
+    _assert_trees_equal(block, slice_kv_block(restored, 1, 4, 12))
+    # nothing outside the target rows was touched
+    for a in jax.tree_util.tree_leaves(restored["blocks"]):
+        a = np.asarray(a)
+        assert not a[:, 0].any()                     # other slot untouched
+        assert not a[:, 1, :4].any() and not a[:, 1, 12:].any()
+    if "remainder" in restored:
+        for a in jax.tree_util.tree_leaves(restored["remainder"]):
+            a = np.asarray(a)
+            assert not a[0].any()
+            assert not a[1, :4].any() and not a[1, 12:].any()
+
+
+def test_seal_dedup_is_a_noop_and_warm_prefix_counts():
+    """Re-sealing a known CID books a dedup (no new store version); the
+    warm-prefix probe counts exactly the leading sealed run."""
+    cfg = get_config(ARCH, smoke=True)
+    caches = _random_caches(cfg, 1, 40, seed=5)
+    kv = _kv_store()
+    chain = prefix_chain(np.arange(32), 8)           # 4 full blocks
+    for b in range(2):                               # seal blocks 0..1
+        kv.seal(chain[b], slice_kv_block(caches, 0, b * 8, (b + 1) * 8), 8)
+    versions = kv.store.stats["versions"]
+    kv.seal(chain[0], None, 0)                       # dedup: block untouched
+    assert kv.stats["dedup_blocks"] == 1
+    assert kv.store.stats["versions"] == versions
+    assert kv.stats["sealed_blocks"] == 2
+    assert kv.warm_prefix(chain[:3]) == 2            # run breaks at block 2
+    assert kv.stats["warm_hits"] == 2
+    assert kv.stats["warm_misses"] == 1
+    assert kv.warm_prefix(chain[:2]) == 2            # fully sealed: no miss
+    assert kv.stats["warm_misses"] == 1
+    assert kv.sealed_cids() == sorted(chain[:2])
+    assert set(kv.manifests(chain[:3])) == \
+        {KVBlockStore.object_id(c) for c in chain[:2]}
+
+
+# ----------------------------------------- prefix chains (deterministic)
+def test_prefix_chain_equal_prefixes_share_cids():
+    """Two token streams sharing a prefix derive IDENTICAL CIDs for
+    every full block inside the shared region — the dedup invariant."""
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, 1000, 37)
+    a = np.concatenate([shared, rng.integers(0, 1000, 11)])
+    b = np.concatenate([shared, rng.integers(0, 1000, 19)])
+    for T in (1, 4, 8, 16):
+        ca, cb = prefix_chain(a, T), prefix_chain(b, T)
+        n_shared = len(shared) // T
+        assert ca[:n_shared] == cb[:n_shared]
+        # the first block crossing the divergence point differs (tails
+        # are distinct with overwhelming probability under this seed)
+        if len(ca) > n_shared and len(cb) > n_shared:
+            assert ca[n_shared] != cb[n_shared]
+
+
+def test_prefix_chain_divergence_propagates_from_first_differing_block():
+    """Flipping ONE token makes every block from its block index on
+    diverge — and every earlier block keep its CID."""
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, 1000, 48)
+    T = 8
+    base = prefix_chain(toks, T)
+    for j in (0, 7, 8, 23, 47):
+        mut = toks.copy()
+        mut[j] += 1
+        chain = prefix_chain(mut, T)
+        pivot = j // T
+        assert chain[:pivot] == base[:pivot]
+        assert all(chain[b] != base[b] for b in range(pivot, len(base)))
+
+
+def test_prefix_cid_binds_token_count():
+    """A tail block over a PREFIX of a full block's tokens never
+    collides with the full block (int64 encoding binds the count), and
+    the chain only ever contains full blocks."""
+    toks = np.arange(16)
+    full = prefix_cid(KV_GENESIS, toks[:8])
+    for k in range(1, 8):
+        assert prefix_cid(KV_GENESIS, toks[:k]) != full
+    assert len(prefix_chain(toks[:15], 8)) == 1      # partial tail excluded
+    assert prefix_chain(toks[:7], 8) == []
+    assert prefix_chain(toks, 8) == [full, prefix_cid(full, toks[8:])]
+
+
+# --------------------------------------------- prefix chains (hypothesis)
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 10_000), min_size=0, max_size=64),
+       st.integers(min_value=1, max_value=8))
+def test_chain_covers_exactly_the_full_blocks(tokens, block_tokens):
+    chain = prefix_chain(tokens, block_tokens)
+    assert len(chain) == len(tokens) // block_tokens
+    assert len(set(chain)) == len(chain)             # chained: all distinct
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 10_000), min_size=0, max_size=48),
+       st.lists(st.integers(0, 10_000), min_size=0, max_size=16),
+       st.lists(st.integers(0, 10_000), min_size=0, max_size=16),
+       st.integers(min_value=1, max_value=8))
+def test_equal_prefixes_imply_equal_cids(shared, tail_a, tail_b, T):
+    ca = prefix_chain(list(shared) + list(tail_a), T)
+    cb = prefix_chain(list(shared) + list(tail_b), T)
+    n = len(shared) // T
+    assert ca[:n] == cb[:n]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 10_000), min_size=1, max_size=48),
+       st.integers(min_value=0, max_value=47),
+       st.integers(min_value=1, max_value=8))
+def test_one_token_divergence_diverges_from_that_block_on(tokens, j, T):
+    j = j % len(tokens)
+    mut = list(tokens)
+    mut[j] += 1
+    base, chain = prefix_chain(tokens, T), prefix_chain(mut, T)
+    pivot = j // T
+    assert chain[:pivot] == base[:pivot]
+    assert all(chain[b] != base[b] for b in range(pivot, len(base)))
+
+
+# ------------------------------------------------------------ validation
+def test_non_attn_configs_are_rejected():
+    """Paging needs row-addressable caches: a config with a local_attn
+    (ring-window) layer is rejected up front."""
+    check_kv_pageable(get_config(ARCH, smoke=True))  # dense attn: fine
+    with pytest.raises(ValueError, match="local_attn"):
+        check_kv_pageable(get_config("gemma3-27b", smoke=True))

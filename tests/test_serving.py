@@ -21,13 +21,14 @@ def _req(rid, plen, new, vocab=64, seed=None):
             "max_new_tokens": new}
 
 
-def _engine(**kw):
+def _engine(batch_slots=2, cache_len=64, **kw):
     from repro.configs import get_config
     from repro.serve.engine import ServingEngine
     from repro.train.loop import init_model
     cfg = get_config("smollm-360m", smoke=True)
     params = init_model(cfg, seed=0)
-    return ServingEngine(cfg, params, batch_slots=2, cache_len=64, **kw)
+    return ServingEngine(cfg, params, batch_slots=batch_slots,
+                         cache_len=cache_len, **kw)
 
 
 # ----------------------------------------------------------- scheduler
@@ -281,6 +282,174 @@ def test_fixed_vs_continuous_trust_verdict_equivalence():
     assert cont_v2[2] == fix_v2[2] == "revoked"
     assert all(v != "finalized" for rid, v in cont_v2.items()
                if rid == 2)
+
+
+# ------------------------------------------------------------ KV paging
+def _shared_prefix_reqs(shared_len=40, tail_len=6, new=4, vocab=64):
+    """Two requests sharing a ``shared_len``-token system prompt with
+    distinct tails — the cross-session prefix-reuse workload."""
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, vocab, shared_len).astype(np.int32)
+    reqs = []
+    for rid in range(2):
+        tail = rng.integers(0, vocab, tail_len).astype(np.int32)
+        reqs.append({"id": rid, "prompt": np.concatenate([shared, tail]),
+                     "max_new_tokens": new})
+    return reqs
+
+
+def test_kv_paging_warm_prefix_reuse_bit_identical():
+    """Two sessions sharing a system prompt, served one at a time: the
+    second admission restores the sealed shared blocks instead of
+    recomputing their prefill (warm hits, restored tokens, strictly
+    earlier first token), while the token streams stay bit-identical to
+    the paging-off oracle."""
+    from repro.serve.engine import KVStorageConfig
+    reqs = _shared_prefix_reqs()             # 40 shared + 6 tail, 4 new
+
+    base = _engine(batch_slots=1)
+    base.submit([dict(r, prompt=r["prompt"].copy()) for r in reqs])
+    done_base = base.run()
+
+    eng = _engine(batch_slots=1, kv_storage=KVStorageConfig(block_tokens=8))
+    eng.submit([dict(r, prompt=r["prompt"].copy()) for r in reqs])
+    done = eng.run()
+    assert done == done_base
+    rep = eng.obs_report()["kv"]
+    # session 0 seals blocks 0..4 of the shared prefix (restorable
+    # blocks end strictly inside the 46-token prompt: (46-1)//8 = 5);
+    # session 1 restores all 5 — zero prefill recompute for 40 tokens
+    assert rep["warm_hits"] == 5
+    assert rep["restored_tokens"] == 40
+    assert rep["sealed_blocks"] > 0 and rep["sealed_bytes"] > 0
+    # the restored prefill shows up as a strictly shorter admission-to-
+    # first-token distance than the cold session's
+    meta = eng.request_meta
+    ttft = {rid: meta[rid]["first_token_tick"] - meta[rid]["admitted_tick"]
+            for rid in (0, 1)}
+    assert ttft[1] < ttft[0]
+
+
+def test_kv_paging_concurrent_identical_prompts_dedup_in_store():
+    """Two slots running the SAME prompt concurrently seal the same
+    prefix CIDs — the second seal of each block is an ExpertStore-level
+    no-op (cross-session dedup), and streams still match the oracle."""
+    from repro.serve.engine import KVStorageConfig
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, 64, 30).astype(np.int32)
+    reqs = [{"id": rid, "prompt": prompt.copy(), "max_new_tokens": 3}
+            for rid in range(2)]
+
+    base = _engine()
+    base.submit([dict(r, prompt=r["prompt"].copy()) for r in reqs])
+    done_base = base.run()
+    eng = _engine(kv_storage=KVStorageConfig(block_tokens=8))
+    eng.submit([dict(r, prompt=r["prompt"].copy()) for r in reqs])
+    assert eng.run() == done_base
+    rep = eng.obs_report()["kv"]
+    assert rep["dedup_blocks"] > 0
+    # dedup'd blocks were never re-uploaded: one store version per
+    # UNIQUE block, regardless of how many sessions sealed it
+    assert rep["store"]["versions"] == rep["sealed_blocks"]
+
+
+def test_kv_page_out_then_readmit_resumes_bit_identically():
+    """A mid-decode slot paged out to the chunked store (full blocks +
+    partial tail) resumes after readmission with the exact same stream
+    as the never-paged oracle."""
+    from repro.serve.engine import KVStorageConfig
+    rng = np.random.default_rng(1)
+    reqs = [{"id": 0, "prompt": rng.integers(0, 64, 20).astype(np.int32),
+             "max_new_tokens": 12}]
+
+    base = _engine(prefill_chunk=4)
+    base.submit([dict(r, prompt=r["prompt"].copy()) for r in reqs])
+    done_base = base.run()
+
+    eng = _engine(prefill_chunk=4,
+                  kv_storage=KVStorageConfig(block_tokens=8))
+    eng.submit([dict(r, prompt=r["prompt"].copy()) for r in reqs])
+    steps = 0
+    while (not eng.sched.slots[0].decoding
+           or len(eng.sched.slots[0].generated) < 4):
+        assert eng.step() and steps < 100
+        steps += 1
+    rid = eng.page_out(0)                    # mid-decode: tail block too
+    assert rid == 0 and not eng.sched.slots[0].active
+    assert eng.sched.depth() == 1            # requeued at the front
+    assert eng.run() == done_base
+    rep = eng.obs_report()["kv"]
+    assert rep["pageouts"] == 1 and rep["resumes"] == 1
+    assert rep["restored_tokens"] > 0
+    assert eng.request_meta[0]["preemptions"] == 1
+
+
+def test_kv_sealing_keeps_tick_commitments_bit_identical():
+    """With DISJOINT prompts (nothing to restore), sealing is pure
+    side-band: every tick commitment's (tick, root, request_ids) equals
+    the paging-off oracle's, kv_root carries the sealed manifests, and
+    the verdict maps match — honest sessions finalize in both."""
+    from repro.serve.engine import KVStorageConfig
+    trust = TrustConfig(audit_rate=1.0, num_verifiers=1, challenge_window=4)
+    reqs = [_req(0, 20, 3), _req(1, 17, 3)]
+
+    def run(kv):
+        eng = _engine(trust=trust,
+                      kv_storage=KVStorageConfig(block_tokens=8)
+                      if kv else None)
+        eng.submit([dict(r, prompt=r["prompt"].copy()) for r in reqs])
+        done = eng.run()
+        verdicts = {rid: ("revoked" if eng.records[rid].revoked
+                          else "finalized" if rid in done else "open")
+                    for rid in eng.records}
+        return eng, done, verdicts
+
+    base, done_b, v_b = run(kv=False)
+    kv, done_k, v_k = run(kv=True)
+    assert done_k == done_b and v_k == v_b
+    assert all(v == "finalized" for v in v_k.values())
+    assert [(tc.tick, tc.root, tc.request_ids)
+            for tc in kv.tick_commitments] == \
+        [(tc.tick, tc.root, tc.request_ids) for tc in base.tick_commitments]
+    assert all(tc.kv_root == "" for tc in base.tick_commitments)
+    assert any(tc.kv_root != "" for tc in kv.tick_commitments)
+    # every sealed block's manifest is reachable for DA challenges
+    kvbs = kv.kvrt.kv
+    assert len(kvbs.manifests(kvbs.sealed_cids())) \
+        == kv.obs_report()["kv"]["sealed_blocks"]
+
+
+def test_kv_paging_verified_warm_reuse_keeps_verdicts():
+    """Warm-prefix reuse under trust: restored prefill changes WHEN
+    tokens land (earlier), never WHAT is committed — both sessions
+    finalize and post-hoc tampering is still caught."""
+    from repro.serve.engine import KVStorageConfig
+    trust = TrustConfig(audit_rate=1.0, num_verifiers=1, challenge_window=4)
+    reqs = _shared_prefix_reqs()
+    eng = _engine(batch_slots=1, trust=trust,
+                  kv_storage=KVStorageConfig(block_tokens=8))
+    eng.submit([dict(r, prompt=r["prompt"].copy()) for r in reqs])
+    done = eng.run()
+    assert set(done) == {0, 1}
+    assert eng.obs_report()["kv"]["warm_hits"] > 0
+    assert all(rec.finalized and not rec.revoked
+               for rec in eng.records.values())
+    eng.records[1].tokens = [t ^ 1 for t in eng.records[1].tokens]
+    assert eng.audit_session(1)["revoked"]
+
+
+def test_kv_storage_validation():
+    from repro.serve.engine import KVStorageConfig
+    with pytest.raises(ValueError, match="block_tokens"):
+        _engine(cache_len=8, kv_storage=KVStorageConfig(block_tokens=8))
+    with pytest.raises(ValueError, match="block_tokens"):
+        _engine(kv_storage=KVStorageConfig(block_tokens=0))
+    eng = _engine()
+    with pytest.raises(ValueError, match="kv_storage"):
+        eng.page_out(0)                      # paging not configured
+    kv_eng = _engine(kv_storage=KVStorageConfig(block_tokens=8))
+    with pytest.raises(ValueError, match="not active"):
+        kv_eng.page_out(0)                   # no running request
 
 
 def test_engine_continuous_dependent_revocation_chains_through_admission():
